@@ -1,0 +1,41 @@
+"""Shared benchmark harness utilities."""
+from __future__ import annotations
+
+import csv
+import time
+from pathlib import Path
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+RESULTS_DIR = Path(__file__).resolve().parent / "results"
+
+
+def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
+            **kw) -> float:
+    """Median wall seconds per call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def write_csv(name: str, rows: List[Dict], print_rows: bool = True) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.csv"
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    if print_rows:
+        for r in rows:
+            print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+    return path

@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks: Pallas (interpret-mode) vs jnp oracle.
+
+Wall-clock here measures the interpret-mode Python execution (NOT TPU
+performance) — the purpose is a correctness + plumbing check in the
+benchmark harness; TPU-side roofline expectations live in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn, write_csv
+from repro.kernels import ops
+
+INF = np.iinfo(np.int32).max
+
+
+def run() -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    b, k, d = 4096, 8, 64
+    begin = np.sort(rng.integers(0, 100, (b, k)).astype(np.int32), axis=1)
+    end = np.concatenate([begin[:, 1:], np.full((b, 1), INF, np.int32)],
+                         axis=1)
+    data = rng.integers(0, 100, (b, k, d)).astype(np.int32)
+    ts = rng.integers(0, 120, b).astype(np.int32)
+    a = [jnp.asarray(x) for x in (begin, end, data, ts)]
+    t_ref = time_fn(ops.mvcc_resolve_ref, *a)
+    t_pal = time_fn(ops.mvcc_resolve, *a)
+    v1, f1 = ops.mvcc_resolve(*a)
+    v2, f2 = ops.mvcc_resolve_ref(*a)
+    ok = bool((np.asarray(v1) == np.asarray(v2)).all())
+    rows.append({"kernel": "mvcc_resolve", "shape": f"b{b}_k{k}_d{d}",
+                 "ref_us": round(t_ref * 1e6), "pallas_interp_us":
+                 round(t_pal * 1e6), "allclose": ok})
+
+    b, kvh, g, dh, t = 8, 4, 4, 128, 2048
+    q = jnp.asarray(rng.standard_normal((b, kvh, g, dh)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((b, t, kvh, dh)), jnp.float32)
+    vv = jnp.asarray(rng.standard_normal((b, t, kvh, dh)), jnp.float32)
+    kl = jnp.asarray(rng.integers(1, t, b), jnp.int32)
+    t_ref = time_fn(ops.decode_attention_ref, q, kk, vv, kl)
+    t_pal = time_fn(ops.decode_attention, q, kk, vv, kl)
+    o1 = ops.decode_attention(q, kk, vv, kl)
+    o2 = ops.decode_attention_ref(q, kk, vv, kl)
+    ok = bool(np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-4))
+    rows.append({"kernel": "decode_attention",
+                 "shape": f"b{b}_kv{kvh}_g{g}_dh{dh}_t{t}",
+                 "ref_us": round(t_ref * 1e6),
+                 "pallas_interp_us": round(t_pal * 1e6), "allclose": ok})
+    write_csv("kernels", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,85 @@
+"""Benchmark harness entry point: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  microbench  Fig 4   CC-shard scalability (subprocess: 8 host devices)
+  ycsb        Fig 5-7 Bohm vs 2PL/SI/OCC, low/high contention + theta sweep
+  smallbank   Fig 8-10 full mix + read-only vs contention
+  kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
+  serving     Bohm-MVCC paged KV serving engine step latency
+
+Roofline terms for the 40 (arch x shape) cells come from the dry-run
+artifact (see repro/launch/dryrun.py and repro/launch/roofline.py) and are
+summarised in EXPERIMENTS.md; they are not re-derived here.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+
+def bench_microbench():
+    # needs its own process: forces 8 host devices before jax init
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+    subprocess.run(
+        [sys.executable, str(Path(__file__).parent / "microbench.py")],
+        check=True, cwd=str(root), env=env)
+
+
+def bench_ycsb(quick: bool = False):
+    from benchmarks import ycsb
+    ycsb.run(sweep_theta=not quick)
+
+
+def bench_smallbank(quick: bool = False):
+    from benchmarks import smallbank
+    smallbank.run(sweep_customers=not quick)
+
+
+def bench_kernels():
+    from benchmarks import kernels
+    kernels.run()
+
+
+def bench_serving():
+    from benchmarks import serving
+    serving.run()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="skip the slow sweep dimensions")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: microbench,ycsb,"
+                         "smallbank,kernels,serving")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    if want("microbench"):
+        print("== microbench (Fig 4) ==", flush=True)
+        bench_microbench()
+    if want("ycsb"):
+        print("== ycsb (Figs 5-7) ==", flush=True)
+        bench_ycsb(args.quick)
+    if want("smallbank"):
+        print("== smallbank (Figs 8-10) ==", flush=True)
+        bench_smallbank(args.quick)
+    if want("kernels"):
+        print("== kernels ==", flush=True)
+        bench_kernels()
+    if want("serving"):
+        print("== serving ==", flush=True)
+        bench_serving()
+
+
+if __name__ == "__main__":
+    main()

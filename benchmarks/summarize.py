@@ -1,0 +1,83 @@
+"""Generate the EXPERIMENTS.md optimized-vs-baseline roofline summary from
+the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.summarize
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+import numpy as np
+
+from repro.launch.roofline import analyze_cell
+
+RESULTS = Path(__file__).resolve().parent / "results"
+
+
+def rows_from(path: Path, mesh: str):
+    data = json.loads(path.read_text())
+    out = {}
+    for key, rec in sorted(data.items()):
+        if not key.endswith(f"|{mesh}"):
+            continue
+        r = analyze_cell(key, rec)
+        if r:
+            out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def gmean(xs):
+    xs = [x for x in xs if x > 0]
+    return float(np.exp(np.mean(np.log(xs)))) if xs else 0.0
+
+
+def main():
+    base = rows_from(RESULTS / "dryrun_baseline.json", "single")
+    opt = rows_from(RESULTS / "dryrun_opt.json", "single")
+    keys = sorted(set(base) & set(opt))
+
+    def agg(rows, field, keys_):
+        return gmean([rows[k][field] for k in keys_])
+
+    train = [k for k in keys if k[1] == "train_4k"]
+    serve = [k for k in keys if k[1] in ("decode_32k", "long_500k")]
+    pre = [k for k in keys if k[1] == "prefill_32k"]
+
+    lines = []
+    lines.append("| cell group | metric | baseline | optimized | ratio |")
+    lines.append("|---|---|---|---|---|")
+    for name, ks in [("train_4k (10)", train), ("prefill_32k (10)", pre),
+                     ("decode (12)", serve)]:
+        for metric, label, fmt in [
+                ("t_memory_s", "memory term", 1e3),
+                ("t_collective_s", "collective term", 1e3),
+                ("t_compute_s", "compute term", 1e3)]:
+            b = agg(base, metric, ks)
+            o = agg(opt, metric, ks)
+            lines.append(f"| {name} | {label} (gmean ms) | {b*fmt:.2f} | "
+                         f"{o*fmt:.2f} | {o/b:.2f}x |")
+        if name.startswith("train"):
+            b = agg(base, "roofline_fraction", ks)
+            o = agg(opt, "roofline_fraction", ks)
+            of = agg(opt, "roofline_fraction_fused", ks)
+            lines.append(f"| {name} | roofline fraction (gmean) | "
+                         f"{b:.1%} | {o:.1%} ({of:.1%} fused) | {o/b:.2f}x |")
+    print("\n".join(lines))
+
+    # per-cell optimized table (markdown) for the appendix
+    print("\nPer-cell optimized (single-pod):\n")
+    print("| arch | shape | comp ms | mem ms | memF ms | coll ms | "
+          "dominant | useful | roofl | roofF |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for k in keys:
+        r = opt[k]
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']*1e3:.2f} | "
+              f"{r['t_memory_s']*1e3:.2f} | {r['t_memory_fused_s']*1e3:.2f} |"
+              f" {r['t_collective_s']*1e3:.3f} | {r['dominant']} | "
+              f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.1%} | "
+              f"{r['roofline_fraction_fused']:.1%} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Quickstart: serializable multiversion transaction processing with Bohm.
+
+Runs the paper's two-phase engine on a small YCSB-style workload, shows the
+serializability guarantee against the serial oracle, and demonstrates the
+write-skew anomaly that Snapshot Isolation commits but Bohm excludes.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.baselines import run_si
+from repro.core.engine import BohmEngine, serial_oracle
+from repro.core.execute import Store, init_store
+from repro.core.txn import Workload, make_batch
+from repro.core.workloads import gen_ycsb_batch, make_ycsb
+
+
+def main():
+    # ------------------------------------------------------------------
+    # 1. A contended YCSB batch through the two-phase engine
+    # ------------------------------------------------------------------
+    wl = make_ycsb()
+    R = 10_000
+    eng = BohmEngine(R, wl)
+    rng = np.random.default_rng(0)
+    batch = gen_ycsb_batch(rng, 512, R, theta=0.9, mix="2rmw8r")
+    reads, metrics = eng.run_batch(batch)
+    print(f"executed 512 txns in {int(metrics['waves'])} dependency waves "
+          f"(reads never blocked writes; ww conflicts cost zero waves)")
+
+    # serializability: identical to executing one-by-one in ts order
+    base, serial_reads = serial_oracle(
+        init_store(R, wl.payload_words).base, batch, wl)
+    assert np.array_equal(np.asarray(eng.snapshot()), np.asarray(base))
+    assert np.array_equal(np.asarray(reads), np.asarray(serial_reads))
+    print("result is bit-identical to the serial execution  [serializable]")
+
+    # ------------------------------------------------------------------
+    # 2. Write-skew: SI's famous anomaly vs Bohm
+    # ------------------------------------------------------------------
+    def add_to_first(vals, args):
+        return vals.at[0, 0].add(vals[1, 0]), jnp.zeros((), bool)
+
+    def add_to_second(vals, args):
+        return vals.at[1, 0].add(vals[0, 0]), jnp.zeros((), bool)
+
+    skew = Workload("skew", 2, 2, 1, (add_to_first, add_to_second))
+    batch = make_batch(np.array([[0, 1], [0, 1]]),
+                       np.array([[0, -1], [-1, 1]]),
+                       np.array([0, 1]), np.zeros((2, 1)))
+    base0 = jnp.array([[3], [5]], jnp.int32)
+
+    si_final, _, _ = run_si(base0, batch, skew, 2)
+    eng2 = BohmEngine(2, skew)
+    eng2.store = Store(base=base0, base_ts=eng2.store.base_ts,
+                       ts_counter=eng2.store.ts_counter)
+    eng2.run_batch(batch)
+    serial_final, _ = serial_oracle(base0, batch, skew)
+    print(f"\nwrite-skew (x=3, y=5; T0: x+=y, T1: y+=x):")
+    print(f"  serial   -> {serial_final.tolist()}")
+    print(f"  Bohm     -> {eng2.snapshot().tolist()}  (= serial)")
+    print(f"  SI       -> {si_final.tolist()}  (NON-serializable!)")
+
+
+if __name__ == "__main__":
+    main()

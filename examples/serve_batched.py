@@ -1,0 +1,53 @@
+"""Batched serving driver: continuous batching over the Bohm-MVCC paged
+KV cache — requests arrive in waves, share cached prefixes (readers never
+block the writers appending new tokens), and pages recycle through
+Condition-3 garbage collection.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import init_params
+from repro.serving.engine import ServeEngine
+
+
+def main():
+    # a small llama-family model so the example runs in seconds on CPU
+    cfg = dataclasses.replace(
+        get_config("smollm-360m"), name="smollm-nano",
+        num_layers=4, d_model=256, num_heads=8, num_kv_heads=4,
+        head_dim=32, d_ff=512, vocab_size=2048)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, slots=8, page_size=16, num_pages=256,
+                      max_pages_per_seq=32)
+
+    rng = np.random.default_rng(0)
+    system_prompt = rng.integers(1, 2000, 32).astype(np.int32)  # shared
+    n_requests = 16
+    for rid in range(n_requests):
+        user = rng.integers(1, 2000, rng.integers(4, 24)).astype(np.int32)
+        prompt = system_prompt if rid % 2 == 0 else \
+            np.concatenate([system_prompt[:16], user])
+        eng.submit(rid, prompt, max_new_tokens=16)
+
+    t0 = time.perf_counter()
+    finished = eng.run()
+    dt = time.perf_counter() - t0
+
+    toks = sum(len(r.generated) for r in finished)
+    s = eng.sched.stats
+    print(f"served {len(finished)} requests / {toks} tokens "
+          f"in {dt:.2f}s ({toks/dt:.0f} tok/s) over {eng.steps} "
+          f"batched decode steps")
+    print(f"prefix-cache hits: {s['prefix_hits']}  "
+          f"pages recycled (Condition-3 GC): {s['pages_recycled']}")
+    print(f"sample output: {finished[0].generated[:8]} ...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Config registry for the assigned architectures + paper workloads."""
+from repro.configs.archs import ALL_ARCHS, get_config, reduced_config
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig, SSMConfig
+
+__all__ = [
+    "ALL_ARCHS", "get_config", "reduced_config",
+    "MLAConfig", "MoEConfig", "ModelConfig", "SSMConfig",
+]

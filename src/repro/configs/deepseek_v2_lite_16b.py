@@ -1,0 +1,4 @@
+"""Assigned architecture config (see repro/configs/archs.py for the table)."""
+from repro.configs.archs import DEEPSEEK_V2_LITE_16B as CONFIG
+
+__all__ = ["CONFIG"]

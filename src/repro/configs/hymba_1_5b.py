@@ -1,0 +1,4 @@
+"""Assigned architecture config (see repro/configs/archs.py for the table)."""
+from repro.configs.archs import HYMBA_1_5B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,4 @@
+"""Assigned architecture config (see repro/configs/archs.py for the table)."""
+from repro.configs.archs import SEAMLESS_M4T_LARGE_V2 as CONFIG
+
+__all__ = ["CONFIG"]

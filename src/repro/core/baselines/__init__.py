@@ -1,0 +1,6 @@
+from repro.core.baselines.hekaton import run_hekaton
+from repro.core.baselines.occ import run_occ
+from repro.core.baselines.snapshot_isolation import run_si
+from repro.core.baselines.two_phase_locking import run_2pl
+
+__all__ = ["run_2pl", "run_hekaton", "run_occ", "run_si"]

@@ -1,0 +1,48 @@
+"""Snapshot Isolation baseline (Berenson et al. [6]).
+
+Batch-concurrent model: every transaction reads the batch-start snapshot;
+write-write conflicts resolve first-committer-wins (the earliest-ts writer
+of each record commits, later writers of the same record abort). Reads are
+never blocked and never block — but anti-dependencies are not tracked, so
+the result can be NON-serializable (write-skew): transactions with
+overlapping read-sets and disjoint write-sets all commit against the same
+snapshot. ``tests/test_serializability.py`` demonstrates the anomaly that
+Bohm provably excludes.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.txn import TxnBatch, Workload
+
+
+def run_si(base: jax.Array, batch: TxnBatch, workload: Workload,
+           num_records: int
+           ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    T, Rd = batch.read_set.shape
+    R, D = base.shape
+    ts = jnp.arange(T, dtype=jnp.int32)
+    INF = jnp.int32(T)
+
+    r_rec = jnp.maximum(batch.read_set, 0)
+    w_rec = jnp.maximum(batch.write_set, 0)
+    w_valid = batch.write_set >= 0
+
+    # first-committer-wins per record
+    flat_rec = jnp.where(w_valid, w_rec, R).reshape(-1)
+    t_b = jnp.where(w_valid, ts[:, None], INF).reshape(-1)
+    min_writer = jnp.full((R + 1,), INF, jnp.int32).at[flat_rec].min(t_b)
+    commit = jnp.all(jnp.where(w_valid, min_writer[w_rec] >= ts[:, None],
+                               True), axis=1)
+
+    vals = base[r_rec]                                        # snapshot reads
+    write_vals, _ = workload.apply(batch.txn_type, vals, batch.args)
+    flat_rec_c = jnp.where(w_valid & commit[:, None], w_rec, R).reshape(-1)
+    base_ext = jnp.concatenate([base, jnp.zeros((1, D), base.dtype)])
+    final = base_ext.at[flat_rec_c].set(write_vals.reshape(-1, D),
+                                        mode="drop")[:-1]
+    return final, vals, {"aborts": jnp.sum(~commit),
+                         "commits": jnp.sum(commit)}

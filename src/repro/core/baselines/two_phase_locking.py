@@ -1,0 +1,85 @@
+"""Single-version two-phase locking — the paper's primary comparison system.
+
+Deterministic round-based simulation of a 2PL executor pool:
+
+  - every pending transaction requests shared locks on its read-set and
+    exclusive locks on its write-set;
+  - a transaction acquires its locks iff, for every requested record, no
+    *older* pending transaction requests that record in a conflicting mode
+    (timestamp-ordered acquisition == wound-wait: deadlock-free, and the
+    oldest transaction always progresses, so every batch terminates);
+  - all transactions that acquired locks execute in one round (they are
+    pairwise non-conflicting, so parallel execution is serializable);
+    everything else waits for the next round.
+
+``rounds`` is the lock-conflict critical path: the hardware-independent
+analogue of the paper's "throughput collapses under contention" — on a real
+multi-core machine round count scales inversely with achievable
+parallelism. Wall-clock on the JAX CPU backend is reported by the
+benchmarks alongside it. Latch/cache-line effects (paper §5.3.2) have no
+analogue on this substrate and are NOT modelled — see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.txn import TxnBatch, Workload
+
+
+def run_2pl(base: jax.Array, batch: TxnBatch, workload: Workload,
+            num_records: int
+            ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Returns (final_base, read_vals, metrics)."""
+    T, Rd = batch.read_set.shape
+    R, D = base.shape
+
+    r_rec = jnp.maximum(batch.read_set, 0)
+    r_valid = batch.read_set >= 0
+    w_rec = jnp.maximum(batch.write_set, 0)
+    w_valid = batch.write_set >= 0
+    ts = jnp.arange(T, dtype=jnp.int32)
+    INF = jnp.int32(T)
+
+    def min_requester(pending, rec, valid):
+        """min pending ts requesting each record in this mode: [R+1]."""
+        t_b = jnp.where(valid & pending[:, None],
+                        ts[:, None], INF)
+        flat_rec = jnp.where(valid, rec, R).reshape(-1)
+        out = jnp.full((R + 1,), INF, jnp.int32)
+        return out.at[flat_rec].min(t_b.reshape(-1))
+
+    def cond(state):
+        base, pending, reads, rounds = state
+        return jnp.any(pending)
+
+    def body(state):
+        base, pending, reads, rounds = state
+        min_w = min_requester(pending, w_rec, w_valid)   # exclusive req
+        min_r = min_requester(pending, r_rec, r_valid)   # shared req
+        # txn t gets its exclusive locks iff it is the min (w or r) requester
+        # on each written record; shared locks iff no older writer requests.
+        w_ok = jnp.all(jnp.where(
+            w_valid,
+            (min_w[w_rec] >= ts[:, None]) & (min_r[w_rec] >= ts[:, None]),
+            True), axis=1)
+        r_ok = jnp.all(jnp.where(
+            r_valid, min_w[r_rec] >= ts[:, None], True), axis=1)
+        grant = pending & w_ok & r_ok
+
+        vals = base[r_rec]                                # [T, Rd, D]
+        write_vals, _ = workload.apply(batch.txn_type, vals, batch.args)
+        flat_rec = jnp.where(w_valid & grant[:, None], w_rec, R).reshape(-1)
+        base_ext = jnp.concatenate([base, jnp.zeros((1, D), base.dtype)])
+        base_new = base_ext.at[flat_rec].set(
+            write_vals.reshape(-1, D), mode="drop")[:-1]
+        reads = jnp.where(grant[:, None, None], vals, reads)
+        return (base_new, pending & ~grant, reads, rounds + 1)
+
+    reads0 = jnp.zeros((T, Rd, D), jnp.int32)
+    base_f, _, reads, rounds = jax.lax.while_loop(
+        cond, body, (base, jnp.ones((T,), bool), reads0,
+                     jnp.zeros((), jnp.int32)))
+    return base_f, reads, {"rounds": rounds}

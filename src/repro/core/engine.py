@@ -1,0 +1,109 @@
+"""BohmEngine: the two-phase batch pipeline (CC phase -> barrier -> exec).
+
+One jitted call runs:   plan -> wavefront execute -> Condition-3 commit.
+The CC phase can run record-partitioned over a mesh axis (``cc_shards``),
+reproducing the paper's intra-transaction parallelism; the execution phase
+is transaction-partitioned (the wavefront vector step IS the union of all
+execution threads' work for a wave).
+
+The paper overlaps CC of batch b+1 with execution of batch b (two thread
+pools). Under JAX's async dispatch the same overlap falls out for free:
+``run_batch`` is non-blocking, so dispatching batch b+1's plan while batch
+b's execution is in flight pipelines on the device queue.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import plan as plan_mod
+from repro.core.execute import Store, commit, execute_plan, init_store
+from repro.core.plan import Plan, cc_plan
+from repro.core.txn import TxnBatch, Workload
+
+
+class BohmEngine:
+    def __init__(self, num_records: int, workload: Workload,
+                 mesh=None, cc_axis: str = "cc"):
+        if num_records > (1 << 20):
+            raise ValueError("composite uint32 keys require R <= 2^20")
+        self.num_records = num_records
+        self.workload = workload
+        self.mesh = mesh
+        self.cc_axis = cc_axis
+        self.store = init_store(num_records, workload.payload_words)
+        self._step = jax.jit(functools.partial(
+            _bohm_step, workload=workload, mesh=mesh, cc_axis=cc_axis))
+
+    def run_batch(self, batch: TxnBatch
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        if batch.size > (1 << 12):
+            raise ValueError("composite uint32 keys require T <= 2^12")
+        self.store, read_vals, metrics = self._step(self.store, batch)
+        return read_vals, metrics
+
+    def run_stream(self, batches) -> Dict[str, jax.Array]:
+        """Pipelined batches (paper §4.1.4 / §4.2): the CC phase of batch
+        b+1 overlaps the execution of batch b. JAX's async dispatch gives
+        the overlap directly — each ``_step`` is enqueued without blocking,
+        so while the device executes batch b's wavefront the host is
+        already tracing/enqueuing b+1's plan; the only synchronisation is
+        the data dependency on the committed store (the paper's batch
+        barrier). Returns the metrics of the final batch."""
+        metrics = None
+        for batch in batches:
+            # no block_until_ready: dispatch and move on
+            self.store, _, metrics = self._step(self.store, batch)
+        jax.block_until_ready(self.store.base)
+        return metrics
+
+    def snapshot(self) -> jax.Array:
+        return self.store.base
+
+
+def _bohm_step(store: Store, batch: TxnBatch, *, workload: Workload,
+               mesh, cc_axis: str):
+    # --- CC phase: timestamps + placeholder versions + read annotations ---
+    if mesh is not None and cc_axis in mesh.shape and \
+            mesh.shape[cc_axis] > 1:
+        sharded = plan_mod.cc_plan_sharded(batch, store.ts_counter, mesh,
+                                           cc_axis)
+        plan = plan_mod.merge_sharded_plan(sharded, batch)
+    else:
+        plan = cc_plan(batch, store.ts_counter)
+    # --- batch barrier (the only synchronisation point) -------------------
+    # --- execution phase: dependency wavefront ----------------------------
+    w_data, read_vals, metrics = execute_plan(plan, batch, store, workload)
+    # --- Condition-3 GC / commit ------------------------------------------
+    new_store = commit(plan, batch, store, w_data)
+    return new_store, read_vals, metrics
+
+
+# ---------------------------------------------------------------------------
+# Serial oracle (serializability ground truth): execute transactions one by
+# one in timestamp order against a single-version store.
+# ---------------------------------------------------------------------------
+def serial_oracle(store_base: jax.Array, batch: TxnBatch,
+                  workload: Workload) -> Tuple[jax.Array, jax.Array]:
+    """Returns (final_base [R, D], read_vals [T, Rd, D])."""
+    D = store_base.shape[1]
+    R = store_base.shape[0]
+
+    def step(base, txn):
+        read_set, write_set, txn_type, args = txn
+        vals = base[jnp.maximum(read_set, 0)]                 # [Rd, D]
+        vals = jnp.where((read_set >= 0)[..., None], vals, 0)
+        write_vals, _ = jax.lax.switch(txn_type, list(workload.branches),
+                                       vals, args)
+        rec = jnp.where(write_set >= 0, write_set, R)
+        base = jnp.concatenate([base, jnp.zeros((1, D), base.dtype)])
+        base = base.at[rec].set(write_vals, mode="drop")[:-1]
+        return base, vals
+
+    final, reads = jax.lax.scan(
+        step, store_base,
+        (batch.read_set, batch.write_set, batch.txn_type, batch.args))
+    return final, reads

@@ -1,0 +1,125 @@
+"""Bohm execution phase (paper §4.2), deterministic wavefront formulation.
+
+The paper's execution threads claim transactions with a CAS and recursively
+evaluate unproduced read dependencies. The TPU-native equivalent is a
+wavefront: each iteration of a ``lax.while_loop`` executes *every*
+transaction whose read dependencies are all Complete (the paper's state
+machine collapses to a boolean ``done`` vector; "Executing" has no meaning
+when a wave is a single fused vector step). The number of waves equals the
+longest read-dependency chain in the batch — writes NEVER add waves
+(write-write ordering was fully resolved by the CC phase; paper §4.2.1:
+"T2 could execute before T1 despite their write-sets overlapping").
+
+Reads perform no writes to shared state: each wave gathers read values from
+the version buffer / base store, computes transaction logic, and scatters
+produced values into the transaction's OWN placeholder slots.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.plan import Plan
+from repro.core.txn import TxnBatch, Workload
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Store:
+    """Single-version committed state (the pre-batch version heads).
+
+    In-flight batch versions live in the plan's version buffer; Condition-3
+    GC (paper §4.2.2) folds batch-final versions back into ``base`` at the
+    batch barrier, so ``base`` always holds exactly the low-watermark state.
+    """
+    base: jax.Array       # [R, D] committed record payloads
+    base_ts: jax.Array    # [R] commit timestamp of the head version
+    ts_counter: jax.Array  # [] next timestamp to assign
+
+
+def init_store(num_records: int, payload_words: int,
+               init_value: int = 0) -> Store:
+    return Store(
+        base=jnp.full((num_records, payload_words), init_value, jnp.int32),
+        base_ts=jnp.zeros((num_records,), jnp.int32),
+        ts_counter=jnp.ones((), jnp.int32))
+
+
+def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
+                 workload: Workload
+                 ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Run the wavefront. Returns (w_data [Nw, D], read_vals [T, Rd, D],
+    metrics)."""
+    T, Rd = batch.read_set.shape
+    Nw = plan.w_rec.shape[0]
+    D = store.base.shape[1]
+
+    base_reads = store.base[jnp.maximum(batch.read_set, 0)]   # [T, Rd, D]
+
+    def cond(state):
+        done, _, _, waves = state
+        return ~jnp.all(done)
+
+    def body(state):
+        done, w_data, read_out, waves = state
+        dep_done = jnp.where(plan.r_dep_txn >= 0,
+                             done[jnp.maximum(plan.r_dep_txn, 0)], True)
+        ready = ~done & jnp.all(dep_done, axis=1)
+
+        # gather read values: in-batch version slot or base head
+        slot = jnp.maximum(plan.r_dep_slot, 0)
+        vals = jnp.where((plan.r_dep_slot >= 0)[..., None],
+                         w_data[slot], base_reads)             # [T, Rd, D]
+        vals = jnp.where((batch.read_set >= 0)[..., None], vals, 0)
+
+        write_vals, abort = workload.apply(batch.txn_type, vals, batch.args)
+        # abort => copy-forward predecessor values into own versions
+        # (branches already return read values for aborted paths; the flag
+        # is surfaced in metrics only).
+
+        # scatter produced values into this txn's placeholder slots
+        w_slot = plan.w_slot                                   # [T, W]
+        take = ready[:, None] & (w_slot >= 0)
+        flat_slot = jnp.where(take, w_slot, Nw).reshape(-1)
+        flat_vals = write_vals.reshape(-1, D)
+        w_data = jnp.concatenate([w_data, jnp.zeros((1, D), w_data.dtype)])
+        w_data = w_data.at[flat_slot].set(
+            jnp.where(take.reshape(-1, 1), flat_vals, 0),
+            mode="drop")[:-1]
+
+        read_out = jnp.where(ready[:, None, None], vals, read_out)
+        return (done | ready, w_data, read_out, waves + 1)
+
+    done0 = jnp.zeros((T,), bool)
+    w_data0 = jnp.zeros((Nw, D), jnp.int32)
+    read0 = jnp.zeros((T, Rd, D), jnp.int32)
+    done, w_data, read_out, waves = jax.lax.while_loop(
+        cond, body, (done0, w_data0, read0, jnp.zeros((), jnp.int32)))
+
+    # abort statistics (re-derive once on final values)
+    _, aborts = workload.apply(batch.txn_type, read_out, batch.args)
+    metrics = {"waves": waves, "aborts": jnp.sum(aborts)}
+    return w_data, read_out, metrics
+
+
+def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array
+           ) -> Store:
+    """Condition-3 GC at the batch barrier: every version superseded within
+    the batch dies; each record's batch-final version becomes the new head.
+    """
+    R = store.base.shape[0]
+    rec = jnp.where(plan.commit_mask, plan.w_rec, R)          # drop pads
+    base = jnp.concatenate([store.base,
+                            jnp.zeros((1,) + store.base.shape[1:],
+                                      store.base.dtype)])
+    base = base.at[rec].set(w_data, mode="drop")[:-1]
+    ts = plan.ts_base + plan.w_txn
+    base_ts = jnp.concatenate([store.base_ts, jnp.zeros((1,), jnp.int32)])
+    base_ts = base_ts.at[rec].set(jnp.where(plan.commit_mask, ts, 0),
+                                  mode="drop")[:-1]
+    T = batch.read_set.shape[0]
+    return Store(base=base, base_ts=base_ts,
+                 ts_counter=store.ts_counter + T)

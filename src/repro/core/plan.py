@@ -1,0 +1,176 @@
+"""Bohm concurrency-control phase (paper §4.1), TPU-native formulation.
+
+The paper's CC threads insert placeholder versions record-by-record in
+timestamp order and annotate reads with version references. The per-record
+sequential insert becomes one sort + segment pass:
+
+  1. every transaction t in the batch gets ts = ts_base + t (the paper's
+     dedicated timestamp thread: a private counter, zero contention);
+  2. flatten the write-sets to (record, ts) pairs and stable-sort by record
+     — within a record, entries stay in ts order, which is exactly what one
+     CC thread owning that record would have produced;
+  3. a version's end_ts is its successor's begin_ts within the record
+     segment (else infinity) — the paper's "update predecessor's end_ts";
+  4. reads are resolved by binary search over the sorted (record, ts) keys:
+     the visible version is the latest in-batch write with ts' < ts, else
+     the base (pre-batch head) version. Read annotations are written into
+     per-transaction plan rows — never into shared record state (the
+     paper's "no writes to shared memory on reads" invariant).
+
+Record-space partitioning (paper §4.1.2) shards this by record id with ZERO
+communication: each shard sorts only the writes it owns (the batch is
+replicated, each shard masks to its partition) — see ``cc_plan_sharded``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.txn import TxnBatch
+
+INF_TS = jnp.iinfo(jnp.int32).max
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Output of the CC phase — everything execution needs, precomputed."""
+    # sorted placeholder versions (one per write-set entry, pads at end)
+    w_rec: jax.Array        # [Nw] record id (INT32_MAX for pads)
+    w_txn: jax.Array        # [Nw] local producer txn index
+    w_end_local: jax.Array  # [Nw] local ts of invalidating txn (or T)
+    w_valid: jax.Array      # [Nw] bool
+    w_key: jax.Array        # [Nw] uint32 sorted (rec * T + t) keys
+    # per-transaction annotations
+    w_slot: jax.Array       # [T, W] slot of txn's writes in the sorted array
+    r_dep_txn: jax.Array    # [T, Rd] local producer txn of each read (-1=base)
+    r_dep_slot: jax.Array   # [T, Rd] version slot for each read (-1 = base)
+    # commit info (Condition-3 GC: only batch-final versions survive)
+    commit_mask: jax.Array  # [Nw] bool: version visible after the batch
+    ts_base: jax.Array      # [] global timestamp of txn 0
+
+
+def _keys(rec: jax.Array, t: jax.Array, T: int) -> jax.Array:
+    """Composite (record, ts) ordering key in uint32. Requires R * T < 2^32
+    (checked in the engine): R <= 2^20 records, T <= 2^12 batch."""
+    return rec.astype(jnp.uint32) * jnp.uint32(T) + t.astype(jnp.uint32)
+
+
+def cc_plan(batch: TxnBatch, ts_base: jax.Array) -> Plan:
+    T, W = batch.write_set.shape
+    Rd = batch.read_set.shape[1]
+    Nw = T * W
+
+    flat_rec = batch.write_set.reshape(-1)                    # [Nw]
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), W)    # [Nw]
+    valid = flat_rec >= 0
+    # pads sort to the end: key -> UINT32_MAX (avoid rec*T overflow)
+    keys = jnp.where(valid, _keys(jnp.maximum(flat_rec, 0), flat_t, T),
+                     jnp.uint32(0xFFFFFFFF))
+
+    order = jnp.argsort(keys)                                 # stable not req:
+    w_key = keys[order]                                       # keys unique
+    w_rec = jnp.where(valid, flat_rec, jnp.int32(INF_TS))[order]
+    w_txn = jnp.where(valid[order], flat_t[order], -1)
+    w_valid = valid[order]
+
+    # end timestamp: successor's begin within the same record segment
+    nxt_rec = jnp.concatenate([w_rec[1:], jnp.full((1,), INF_TS, jnp.int32)])
+    nxt_txn = jnp.concatenate([w_txn[1:], jnp.full((1,), T, jnp.int32)])
+    same = nxt_rec == w_rec
+    w_end_local = jnp.where(same, nxt_txn, T)                 # T == "infinity"
+    commit_mask = w_valid & ~same                             # segment-last
+
+    # inverse permutation: where did txn t's w-th write land?
+    inv = jnp.zeros(Nw, jnp.int32).at[order].set(
+        jnp.arange(Nw, dtype=jnp.int32))
+    w_slot = jnp.where(valid.reshape(T, W), inv.reshape(T, W), -1)
+
+    # read resolution: latest in-batch write with key strictly below the
+    # reader's (record, ts) key — RMW reads its predecessor, not itself.
+    r_rec = batch.read_set                                    # [T, Rd]
+    r_t = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, Rd))
+    r_valid = r_rec >= 0
+    r_keys = _keys(jnp.where(r_valid, r_rec, 0), r_t, T)
+    pos = jnp.searchsorted(w_key, r_keys.reshape(-1), side="left") - 1
+    pos = pos.reshape(T, Rd)
+    cand_rec = jnp.where(pos >= 0, w_rec[jnp.maximum(pos, 0)], -1)
+    hit = r_valid & (pos >= 0) & (cand_rec == r_rec)
+    r_dep_slot = jnp.where(hit, pos, -1)
+    r_dep_txn = jnp.where(hit, w_txn[jnp.maximum(pos, 0)], -1)
+
+    return Plan(w_rec=w_rec, w_txn=w_txn, w_end_local=w_end_local,
+                w_valid=w_valid, w_key=w_key, w_slot=w_slot,
+                r_dep_txn=r_dep_txn, r_dep_slot=r_dep_slot,
+                commit_mask=commit_mask, ts_base=jnp.asarray(ts_base,
+                                                             jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Record-partitioned CC (paper §4.1.2) via shard_map: each shard receives the
+# full batch (the paper: "every CC thread examines every transaction") and
+# plans only the records it owns. No communication whatsoever inside the
+# phase; the only synchronisation is the implicit batch barrier at the end.
+# ---------------------------------------------------------------------------
+def cc_plan_sharded(batch: TxnBatch, ts_base: jax.Array, mesh,
+                    axis: str = "cc") -> Plan:
+    n = mesh.shape[axis]
+
+    def shard_fn(read_set, write_set, txn_type, args, ts_b):
+        shard = jax.lax.axis_index(axis)
+        # mask write/read records not owned by this shard (hash partition)
+        owned_w = (write_set % n) == shard
+        owned_r = (read_set % n) == shard
+        local = TxnBatch(jnp.where(owned_r & (read_set >= 0), read_set, -1),
+                         jnp.where(owned_w & (write_set >= 0), write_set, -1),
+                         txn_type, args)
+        p = cc_plan(local, ts_b)
+        return jax.tree.map(lambda x: x[None], p)   # add shard axis
+
+    from jax.sharding import PartitionSpec as P
+    fn = jax.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P()),
+        out_specs=jax.tree.map(lambda _: P(axis), _plan_structure()),
+        check_vma=False)
+    return fn(batch.read_set, batch.write_set, batch.txn_type, batch.args,
+              jnp.asarray(ts_base, jnp.int32))
+
+
+def _plan_structure():
+    z = jnp.zeros((), jnp.int32)
+    return Plan(w_rec=z, w_txn=z, w_end_local=z, w_valid=z, w_key=z,
+                w_slot=z, r_dep_txn=z, r_dep_slot=z, commit_mask=z,
+                ts_base=z)
+
+
+def merge_sharded_plan(plan: Plan, batch: TxnBatch) -> Plan:
+    """Collapse a [n_shard, ...] plan into the single-store layout.
+
+    Per-shard slots index into per-shard version arrays; execution uses
+    (shard, slot) pairs encoded as shard * Nw + slot. Reads/writes merge by
+    maximum (each entry is owned by exactly one shard; others hold -1/pads).
+    """
+    n = plan.w_rec.shape[0]
+    Nw = plan.w_rec.shape[1]
+    off = (jnp.arange(n, dtype=jnp.int32) * Nw)[:, None]
+
+    def enc(slot2d):
+        return jnp.where(slot2d >= 0, slot2d + off.reshape(
+            (n,) + (1,) * (slot2d.ndim - 1)), -1)
+
+    w_slot = jnp.max(enc(plan.w_slot), axis=0)
+    r_dep_slot = jnp.max(enc(plan.r_dep_slot), axis=0)
+    r_dep_txn = jnp.max(plan.r_dep_txn, axis=0)
+    return Plan(
+        w_rec=plan.w_rec.reshape(-1),
+        w_txn=plan.w_txn.reshape(-1),
+        w_end_local=plan.w_end_local.reshape(-1),
+        w_valid=plan.w_valid.reshape(-1),
+        w_key=plan.w_key.reshape(-1),
+        w_slot=w_slot, r_dep_txn=r_dep_txn, r_dep_slot=r_dep_slot,
+        commit_mask=plan.commit_mask.reshape(-1),
+        ts_base=plan.ts_base.reshape(-1)[0])

@@ -1,0 +1,70 @@
+"""Transaction-batch representation and workload logic registry.
+
+A batch of T transactions is a fixed-shape pytree (pad with record id -1):
+
+    read_set  [T, R_max] int32   records read (RMW records appear here too)
+    write_set [T, W_max] int32   records written (placeholder versions)
+    txn_type  [T]        int32   index into the workload's logic branches
+    args      [T, A]     int32   per-transaction arguments (amounts, ...)
+
+Workload logic is a list of pure branch functions, one per transaction type:
+
+    branch(read_vals [R_max, D], args [A]) -> (write_vals [W_max, D],
+                                               abort flag)
+
+Branches must derive write values only from read values and args (Bohm's
+abort rule — an aborted transaction copy-forwards its predecessor's value —
+is then automatic: the branch returns the read value unchanged).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TxnBatch:
+    read_set: jax.Array      # [T, Rd]
+    write_set: jax.Array     # [T, W]
+    txn_type: jax.Array      # [T]
+    args: jax.Array          # [T, A]
+
+    @property
+    def size(self) -> int:
+        return self.read_set.shape[0]
+
+    @property
+    def n_read(self) -> int:
+        return self.read_set.shape[1]
+
+    @property
+    def n_write(self) -> int:
+        return self.write_set.shape[1]
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    name: str
+    n_read: int
+    n_write: int
+    payload_words: int
+    branches: Sequence[Callable]     # type index -> branch fn
+    may_abort: bool = False
+
+    def apply(self, txn_type: jax.Array, read_vals: jax.Array,
+              args: jax.Array) -> Tuple[jax.Array, jax.Array]:
+        """Vectorised over a batch: read_vals [T, Rd, D] -> [T, W, D]."""
+        def one(tt, rv, a):
+            return jax.lax.switch(tt, list(self.branches), rv, a)
+        return jax.vmap(one)(txn_type, read_vals, args)
+
+
+def make_batch(read_set, write_set, txn_type, args) -> TxnBatch:
+    return TxnBatch(jnp.asarray(read_set, jnp.int32),
+                    jnp.asarray(write_set, jnp.int32),
+                    jnp.asarray(txn_type, jnp.int32),
+                    jnp.asarray(args, jnp.int32))

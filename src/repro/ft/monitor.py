@@ -1,0 +1,80 @@
+"""Fault-tolerance primitives: heartbeats, straggler detection, elastic
+remesh planning.
+
+On a real cluster the heartbeat store is external (etcd / GCS object);
+here it is process-local but the state machine is the deployed one:
+  - every worker beats per step; a worker silent for ``timeout_steps`` is
+    declared failed -> the driver restores the latest checkpoint version
+    onto the surviving mesh (see ``plan_remesh``).
+  - per-step durations feed an EWMA straggler detector; a step slower than
+    ``threshold`` x the EWMA flags mitigation (work re-balancing /
+    speculative re-execution of the slow host's shard).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float = 300.0):
+        self.timeout_s = timeout_s
+        self.last_beat: Dict[int, Tuple[int, float]] = {}
+
+    def beat(self, step: int, worker: int = 0) -> None:
+        self.last_beat[worker] = (step, time.monotonic())
+
+    def failed_workers(self) -> List[int]:
+        now = time.monotonic()
+        return [w for w, (_, t) in self.last_beat.items()
+                if now - t > self.timeout_s]
+
+
+class StragglerDetector:
+    """EWMA of step time; flags steps exceeding threshold x the mean."""
+
+    def __init__(self, alpha: float = 0.1, threshold: float = 2.0):
+        self.alpha = alpha
+        self.threshold = threshold
+        self.ewma: Optional[float] = None
+        self.flagged: List[int] = []
+        self.n = 0
+
+    def record(self, dt: float) -> bool:
+        self.n += 1
+        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        if slow:
+            self.flagged.append(self.n)
+            # a straggling step should not drag the baseline up
+            return True
+        self.ewma = dt if self.ewma is None else \
+            (1 - self.alpha) * self.ewma + self.alpha * dt
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    """Elastic-scaling decision after failures: the largest mesh of the
+    same axis structure that fits the surviving device count."""
+    data: int
+    model: int
+    pods: int = 1
+
+    @property
+    def devices(self) -> int:
+        return self.data * self.model * self.pods
+
+
+def plan_remesh(surviving_devices: int, *, model_parallel: int = 16,
+                pods: int = 1) -> RemeshPlan:
+    """Keep TP fixed (model shards must fit per-chip memory), shrink the
+    data axis to the largest value that fits, drop to one pod if needed."""
+    if surviving_devices < model_parallel:
+        raise RuntimeError("not enough devices for one model shard")
+    per_pod = surviving_devices // pods
+    data = max(1, per_pod // model_parallel)
+    # power-of-two data axis keeps batch divisibility simple
+    while data & (data - 1):
+        data -= 1
+    return RemeshPlan(data=data, model=model_parallel, pods=pods)

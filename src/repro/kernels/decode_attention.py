@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: grouped-query flash-decode attention.
+
+The serving hot loop: one query token per sequence attending over a long KV
+cache. Grid = (batch, kv_head, T_blocks); the T dimension is the innermost
+(sequential on TPU) grid axis, so the output block for a (b, h) pair is
+revisited across T steps carrying the running (max, sum, acc) in float32
+scratch — the classic flash-decoding accumulation, tiled so each KV block
+lives in VMEM once.
+
+    q      [B, KvH, G, Dh]    (G = query heads per KV head)
+    k, v   [B, T, KvH, Dh]
+    kv_len [B] i32            valid cache length per sequence
+    out    [B, KvH, G, Dh]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_kernel(kvlen_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, block_t: int, scale: float):
+    t_idx = pl.program_id(2)
+
+    @pl.when(t_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, Dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [Tb, Dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)               # [Tb, Dh]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, Tb]
+
+    pos = t_idx * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_t), 1)
+    mask = pos < kvlen_ref[0]
+    s = jnp.where(mask, s, -jnp.inf)
+
+    m_prev = m_ref[...]                                   # [G]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+    p = jnp.exp(s - m_safe[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.where(jnp.isfinite(m_prev), jnp.exp(m_prev - m_safe), 0.0)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    m_ref[...] = m_new
+
+    @pl.when(t_idx == pl.num_programs(2) - 1)
+    def _fin():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *, block_t: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    b, kvh, g, dh = q.shape
+    t = k.shape[1]
+    bt = min(block_t, t)
+    pad_t = (-t) % bt
+    if pad_t:
+        k = jnp.pad(k, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+    tp = t + pad_t
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = kv_len[None].repeat(b)
+
+    grid = (b, kvh, tp // bt)
+    kernel = functools.partial(_decode_kernel, block_t=bt,
+                               scale=dh ** -0.5)
+    out, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ti: (bi,)),
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ti: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, bt, 1, dh), lambda bi, hi, ti: (bi, ti, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda bi, hi, ti: (bi, hi, 0, 0)),
+            pl.BlockSpec((g,), lambda bi, hi, ti: (0,)),
+            pl.BlockSpec((g,), lambda bi, hi, ti: (0,)),
+            pl.BlockSpec((g, dh), lambda bi, hi, ti: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kvh, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((g,), jnp.float32),      # running max
+            jax.ShapeDtypeStruct((g,), jnp.float32),      # running sum
+            jax.ShapeDtypeStruct((g, dh), jnp.float32),   # accumulator
+        ],
+        interpret=interpret,
+    )(kv_len, q, k, v)
+    return out

@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: causal grouped-query flash attention (prefill/train).
+
+This kernel is why the roofline memory term's pessimistic bound (one HBM
+pass per softmax elementwise op — see launch/counting.py) does not apply on
+the TPU target: the whole mask/max/exp/rescale chain lives in VMEM between
+the QK^T and PV matmuls, so HBM traffic is q+k+v reads and out writes only.
+
+Grid = (batch, kv_head, q_blocks, kv_blocks); kv innermost (sequential on
+TPU). Blocks strictly above the causal diagonal are skipped entirely
+(pl.when) — matching the block-skipping jnp path (perf iteration 4).
+Running (max, sum, acc) live in per-(b, h, q) revisited f32 scratch.
+
+    q   [B, S, KvH, G, Dh]   (G = query heads per KV head)
+    k,v [B, S, KvH, Dh]
+    out [B, S, KvH, G, Dh]
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  block_q: int, block_k: int, scale: float):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(kj * block_k <= qi * block_q + block_q - 1)   # causal skip
+    def _work():
+        q = q_ref[0, :, 0].astype(jnp.float32) * scale     # [bq, G, Dh]
+        k = k_ref[0, :, 0].astype(jnp.float32)             # [bk, Dh]
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q.reshape(-1, q.shape[-1]), k,
+            (((1,), (1,)), ((), ())))                      # [bq*G, bk]
+        g = q.shape[1]
+        s = s.reshape(block_q, g, block_k)
+
+        q_pos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, 1, block_k), 0)
+        k_pos = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, 1, block_k), 2)
+        s = jnp.where(k_pos <= q_pos, s, -jnp.inf)
+
+        m_prev = m_ref[...]                                # [bq, G]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(k_pos <= q_pos, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m_prev),
+                         jnp.exp(m_prev - m_safe), 0.0)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(
+            p.reshape(-1, block_k), v, (((1,), (0,)), ((), ())))
+        acc_ref[...] = acc_ref[...] * corr[..., None] + \
+            pv.reshape(block_q, g, -1)
+        m_ref[...] = m_new
+
+    @pl.when(kj == pl.num_programs(3) - 1)
+    def _fin():
+        o_ref[0, :, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[...], 1e-30)[..., None]
+                          ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k",
+                                             "interpret"))
+def flash_attention_causal(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                           block_q: int = 256, block_k: int = 256,
+                           interpret: bool = True) -> jax.Array:
+    b, s, kvh, g, dh = q.shape
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+
+    grid = (b, kvh, s // bq, s // bk)
+    kernel = functools.partial(_flash_kernel, block_q=bq, block_k=bk,
+                               scale=dh ** -0.5)
+    out, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, g, dh),
+                         lambda bi, hi, qi, kj: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda bi, hi, qi, kj: (bi, kj, hi, 0)),
+            pl.BlockSpec((1, bk, 1, dh),
+                         lambda bi, hi, qi, kj: (bi, kj, hi, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bq, 1, g, dh),
+                         lambda bi, hi, qi, kj: (bi, qi, hi, 0, 0)),
+            pl.BlockSpec((bq, g), lambda bi, hi, qi, kj: (0, 0)),
+            pl.BlockSpec((bq, g), lambda bi, hi, qi, kj: (0, 0)),
+            pl.BlockSpec((bq, g, dh), lambda bi, hi, qi, kj: (0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, kvh, g, dh), q.dtype),
+            jax.ShapeDtypeStruct((bq, g), jnp.float32),
+            jax.ShapeDtypeStruct((bq, g), jnp.float32),
+            jax.ShapeDtypeStruct((bq, g, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out

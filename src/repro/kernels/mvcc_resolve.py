@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: MVCC version-visibility resolution + payload select.
+
+This is the paper's §4.1.3 read path ("find the version with
+t_begin <= ts and ts < t_end") adapted to the TPU memory hierarchy: the
+linked-list prev-pointer traversal becomes a K-wide interval test over a
+per-record version ring held in VMEM, fused with the payload select so each
+version window is read from HBM exactly once.
+
+Layout: callers pre-gather the candidate windows per read (XLA's gather is
+the efficient primitive for the HBM-resident [R, K] store):
+
+    begin [B, K] i32   version begin timestamps (garbage slots: INT32_MAX)
+    end   [B, K] i32   version end timestamps   (open versions: INT32_MAX)
+    data  [B, K, D]    payloads
+    ts    [B]    i32   reader timestamps
+
+Returns (vals [B, D], found [B] bool). Grid tiles (B, D); the visibility
+mask is recomputed per D-tile (cheap VPU work) so payload tiles stream
+through VMEM independently — the kernel is memory-bound by design and its
+roofline is the data tile traffic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = jnp.iinfo(jnp.int32).min
+
+
+def _resolve_kernel(ts_ref, begin_ref, end_ref, data_ref, out_ref,
+                    found_ref):
+    ts = ts_ref[...][:, None]                       # [Bb, 1]
+    begin = begin_ref[...]                          # [Bb, K]
+    end = end_ref[...]
+    vis = (begin <= ts) & (ts < end)
+    score = jnp.where(vis, begin, NEG_INF)
+    best = jnp.max(score, axis=1)                   # [Bb]
+    sel = vis & (score == best[:, None])            # exactly one in a
+    #                                                 consistent store
+    data = data_ref[...]                            # [Bb, K, Dd]
+    out_ref[...] = jnp.sum(
+        jnp.where(sel[:, :, None], data, jnp.zeros_like(data)), axis=1)
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        found_ref[...] = best > NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret"))
+def mvcc_resolve(begin: jax.Array, end: jax.Array, data: jax.Array,
+                 ts: jax.Array, *, block_b: int = 256, block_d: int = 128,
+                 interpret: bool = True):
+    b, k = begin.shape
+    d = data.shape[-1]
+    bb = min(block_b, b)
+    dd = min(block_d, d)
+    pad_b = (-b) % bb
+    pad_d = (-d) % dd
+    if pad_b or pad_d:
+        begin = jnp.pad(begin, ((0, pad_b), (0, 0)))
+        end = jnp.pad(end, ((0, pad_b), (0, 0)))
+        data = jnp.pad(data, ((0, pad_b), (0, 0), (0, pad_d)))
+        ts = jnp.pad(ts, (0, pad_b))
+    bp, dp = b + pad_b, d + pad_d
+
+    grid = (bp // bb, dp // dd)
+    vals, found = pl.pallas_call(
+        _resolve_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k, dd), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dd), lambda i, j: (i, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, dp), data.dtype),
+            jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ts, begin, end, data)
+    return vals[:b, :d], found[:b]

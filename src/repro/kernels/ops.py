@@ -1,0 +1,40 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+On TPU the kernels lower natively; on this CPU-only substrate they run in
+``interpret=True`` mode (the kernel body executes in Python on CPU), which
+is what the per-kernel allclose tests in tests/test_kernels.py validate
+against the jnp oracles in ref.py.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode
+from repro.kernels.flash_attention import \
+    flash_attention_causal as _flash
+from repro.kernels.mvcc_resolve import mvcc_resolve as _resolve
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def mvcc_resolve(begin, end, data, ts, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _resolve(begin, end, data, ts, **kw)
+
+
+def decode_attention(q, k, v, kv_len, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _decode(q, k, v, kv_len, **kw)
+
+
+def flash_attention_causal(q, k, v, **kw):
+    kw.setdefault("interpret", _interpret())
+    return _flash(q, k, v, **kw)
+
+
+mvcc_resolve_ref = ref.mvcc_resolve_ref
+decode_attention_ref = ref.decode_attention_ref
+flash_attention_causal_ref = ref.flash_attention_causal_ref

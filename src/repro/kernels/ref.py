@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.iinfo(jnp.int32).min
+
+
+def mvcc_resolve_ref(begin: jax.Array, end: jax.Array, data: jax.Array,
+                     ts: jax.Array):
+    """Visibility: the version with max begin among {begin <= ts < end}."""
+    vis = (begin <= ts[:, None]) & (ts[:, None] < end)        # [B, K]
+    score = jnp.where(vis, begin, NEG_INF)
+    best = jnp.max(score, axis=1)
+    found = best > NEG_INF
+    idx = jnp.argmax(score, axis=1)
+    vals = jnp.take_along_axis(
+        data, idx[:, None, None].repeat(data.shape[-1], -1), axis=1)[:, 0]
+    vals = jnp.where(found[:, None], vals, 0)
+    return vals, found
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array) -> jax.Array:
+    """q [B,KvH,G,Dh]; k,v [B,T,KvH,Dh]; kv_len [B] or scalar."""
+    b, kvh, g, dh = q.shape
+    t = k.shape[1]
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        kv_len = kv_len[None].repeat(b)
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32) * dh ** -0.5,
+                   k.astype(jnp.float32))
+    mask = jnp.arange(t)[None, :] < kv_len[:, None]           # [B, T]
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def flash_attention_causal_ref(q: jax.Array, k: jax.Array,
+                               v: jax.Array) -> jax.Array:
+    """q [B,S,KvH,G,Dh]; k,v [B,S,KvH,Dh] — full-softmax causal oracle."""
+    b, s, kvh, g, dh = q.shape
+    sc = jnp.einsum("bqkgd,btkd->bkgqt", q.astype(jnp.float32) * dh ** -0.5,
+                    k.astype(jnp.float32))
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None, None], sc, -jnp.inf)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

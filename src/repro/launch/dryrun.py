@@ -1,0 +1,132 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import/init: jax locks the device count on first use.
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) cell on the
+production meshes, record memory/cost/collective analysis for the roofline.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b \
+        --shape train_4k --mesh single                              # one cell
+Results are cached incrementally in benchmarks/results/dryrun.json.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import ALL_ARCHS, get_config
+from repro.launch import specs as specs_mod
+from repro.launch.mesh import make_production_mesh
+from repro.launch.counting import hlo_collectives, jaxpr_costs
+
+RESULTS = Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str) -> dict:
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    cfg = get_config(arch)
+    ok, why = specs_mod.cell_supported(cfg, shape_name)
+    if not ok:
+        return {"status": "skipped", "reason": why}
+    from repro.parallel.constraints import activation_mesh
+    t0 = time.time()
+    sp = os.environ.get("REPRO_SEQUENCE_PARALLEL", "0") == "1"
+    with mesh, activation_mesh(mesh, sequence_parallel=sp):
+        jfn, args, cfg = specs_mod.build_cell(arch, shape_name, mesh)
+        lowered = jfn.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        jc = jaxpr_costs(jfn, *args)
+    coll = hlo_collectives(hlo)
+    nparams = cfg.num_params()
+    res = {
+        "status": "ok",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "devices": int(mesh.size),
+        "memory": {
+            "argument_bytes": int(mem.argument_size_in_bytes),
+            "output_bytes": int(mem.output_size_in_bytes),
+            "temp_bytes": int(mem.temp_size_in_bytes),
+            "alias_bytes": int(mem.alias_size_in_bytes),
+            "peak_bytes_per_device": int(mem.argument_size_in_bytes
+                                         + mem.output_size_in_bytes
+                                         + mem.temp_size_in_bytes
+                                         - mem.alias_size_in_bytes),
+        },
+        "cost": {k: float(v) for k, v in cost.items()
+                 if k in ("flops", "bytes accessed", "transcendentals")},
+        "jaxpr": {k: float(v) for k, v in jc.items()},
+        "collectives": coll,
+        "model": {"params": int(nparams),
+                  "active_params": int(cfg.num_active_params())},
+    }
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    out_path = Path(args.out)
+    results = {}
+    if out_path.exists():
+        results = json.loads(out_path.read_text())
+
+    archs = [args.arch] if args.arch else list(ALL_ARCHS)
+    shapes = [args.shape] if args.shape else list(specs_mod.SHAPES)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape}|{mesh_kind}"
+                if key in results and not args.force and \
+                        results[key].get("status") in ("ok", "skipped"):
+                    print(f"[cached] {key}", flush=True)
+                    continue
+                print(f"[run]    {key} ...", flush=True)
+                try:
+                    res = run_cell(arch, shape, mesh_kind)
+                except Exception as e:  # noqa: BLE001 — record and continue
+                    res = {"status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                results[key] = res
+                out_path.write_text(json.dumps(results, indent=1))
+                status = res["status"]
+                extra = ""
+                if status == "ok":
+                    gb = res["memory"]["peak_bytes_per_device"] / 2**30
+                    extra = (f" peak={gb:.2f}GiB/dev "
+                             f"flops={res['cost'].get('flops', 0):.3g} "
+                             f"coll={res['collectives']['total_bytes']:.3g}B "
+                             f"compile={res['compile_s']}s")
+                elif status == "error":
+                    extra = " " + res["error"][:200]
+                print(f"[{status}] {key}{extra}", flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,165 @@
+"""ShapeDtypeStruct input specs + step functions for every
+(architecture x input-shape) cell of the assignment.
+
+Shapes (per assignment):
+    train_4k     seq_len=4096    global_batch=256   -> train_step
+    prefill_32k  seq_len=32768   global_batch=32    -> prefill
+    decode_32k   seq_len=32768   global_batch=128   -> serve_step (1 token)
+    long_500k    seq_len=524288  global_batch=1     -> serve_step (1 token)
+
+``long_500k`` requires sub-quadratic attention: it runs only for the
+ssm/hybrid archs (mamba2-370m, hymba-1.5b); pure full-attention archs skip
+it (documented in DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.transformer import (AUDIO_FEAT_DIM, ENC_LEN_AT_DECODE,
+                                      VISION_EMBED_DIM)
+from repro.parallel import sharding as shd
+from repro.training import optimizer as opt
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_supported(cfg: ModelConfig, shape_name: str) -> Tuple[bool, str]:
+    if shape_name == "long_500k" and cfg.family not in LONG_OK_FAMILIES:
+        return False, ("full-attention arch: 524k-token decode is "
+                       "quadratic-cost; skipped per DESIGN.md")
+    return True, ""
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs
+# ---------------------------------------------------------------------------
+def train_batch_specs(cfg: ModelConfig, mesh, seq: int, batch: int):
+    bsh = lambda s: shd.batch_sharding(mesh, s)
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "patches":
+        n_txt = seq - cfg.num_patches
+        out["tokens"] = _sds((batch, n_txt), jnp.int32,
+                             bsh((batch, n_txt)))
+        out["labels"] = _sds((batch, n_txt), jnp.int32,
+                             bsh((batch, n_txt)))
+        out["patches"] = _sds((batch, cfg.num_patches, VISION_EMBED_DIM),
+                              jnp.bfloat16,
+                              bsh((batch, cfg.num_patches, VISION_EMBED_DIM)))
+        return out
+    out["tokens"] = _sds((batch, seq), jnp.int32, bsh((batch, seq)))
+    out["labels"] = _sds((batch, seq), jnp.int32, bsh((batch, seq)))
+    if cfg.enc_dec:
+        out["frames"] = _sds((batch, seq, AUDIO_FEAT_DIM), jnp.bfloat16,
+                             bsh((batch, seq, AUDIO_FEAT_DIM)))
+    return out
+
+
+def prefill_batch_specs(cfg: ModelConfig, mesh, seq: int, batch: int):
+    bsh = lambda s: shd.batch_sharding(mesh, s)
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "patches":
+        n_txt = seq - cfg.num_patches
+        out["tokens"] = _sds((batch, n_txt), jnp.int32, bsh((batch, n_txt)))
+        out["patches"] = _sds((batch, cfg.num_patches, VISION_EMBED_DIM),
+                              jnp.bfloat16,
+                              bsh((batch, cfg.num_patches, VISION_EMBED_DIM)))
+        return out
+    if cfg.enc_dec:
+        out["frames"] = _sds((batch, seq, AUDIO_FEAT_DIM), jnp.bfloat16,
+                             bsh((batch, seq, AUDIO_FEAT_DIM)))
+        out["tokens"] = _sds((batch, 1024), jnp.int32, bsh((batch, 1024)))
+        return out
+    out["tokens"] = _sds((batch, seq), jnp.int32, bsh((batch, seq)))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh, seq: int, batch: int):
+    cache = jax.eval_shape(
+        lambda: tf.init_cache(cfg, batch, seq, jnp.bfloat16))
+    shardings = shd.cache_shardings(cfg, mesh, cache)
+    return jax.tree.map(
+        lambda l, s: _sds(l.shape, l.dtype, s), cache, shardings)
+
+
+def abstract_params_sharded(cfg: ModelConfig, mesh, mode: str = "train"):
+    params = tf.abstract_params(cfg)
+    sh = shd.param_shardings(cfg, mesh, mode)
+    return jax.tree.map(lambda l, s: _sds(l.shape, l.dtype, s), params, sh)
+
+
+def abstract_opt_sharded(cfg: ModelConfig, mesh, abstract_p):
+    sh = shd.param_shardings(cfg, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    scalar = NamedSharding(mesh, P())
+    m = jax.tree.map(lambda l, s: _sds(l.shape, jnp.float32, s),
+                     abstract_p, sh)
+    return {"m": m, "v": m, "step": _sds((), jnp.int32, scalar)}
+
+
+# ---------------------------------------------------------------------------
+# Step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig) -> Callable:
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tf.loss_fn(p, batch, cfg))(params)
+        new_p, new_opt, metrics = opt.adamw_update(params, grads, opt_state)
+        return new_p, new_opt, {"loss": loss, **metrics}
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = tf.prefill(params, batch, cfg)
+        return logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, tokens):
+        return tf.decode_step(params, cache, tokens, cfg)
+    return serve_step
+
+
+def build_cell(arch: str, shape_name: str, mesh):
+    """Returns (jitted_fn, abstract_args tuple) for one dry-run cell."""
+    cfg = get_config(arch)
+    info = SHAPES[shape_name]
+    seq, batch, kind = info["seq"], info["batch"], info["kind"]
+    params = abstract_params_sharded(
+        cfg, mesh, mode="train" if kind == "train" else "serve")
+
+    if kind == "train":
+        fn = make_train_step(cfg)
+        opt_state = abstract_opt_sharded(cfg, mesh, params)
+        bspec = train_batch_specs(cfg, mesh, seq, batch)
+        jfn = jax.jit(fn, donate_argnums=(0, 1))
+        return jfn, (params, opt_state, bspec), cfg
+    if kind == "prefill":
+        fn = make_prefill_step(cfg)
+        bspec = prefill_batch_specs(cfg, mesh, seq, batch)
+        return jax.jit(fn), (params, bspec), cfg
+    # decode
+    fn = make_serve_step(cfg)
+    cache = cache_specs(cfg, mesh, seq, batch)
+    tokens = _sds((batch, 1), jnp.int32,
+                  shd.batch_sharding(mesh, (batch, 1)))
+    return jax.jit(fn, donate_argnums=(1,)), (params, cache, tokens), cfg

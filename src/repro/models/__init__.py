@@ -1,0 +1,6 @@
+from repro.models.transformer import (abstract_params, decode_step,
+                                      init_cache, init_params, loss_fn,
+                                      param_defs, prefill)
+
+__all__ = ["abstract_params", "decode_step", "init_cache", "init_params",
+           "loss_fn", "param_defs", "prefill"]

@@ -1,0 +1,216 @@
+"""Attention modules: GQA (with optional qk-norm / sliding window) and
+DeepSeek-style MLA (multi-head latent attention) with absorbed decode.
+
+Each module exposes:
+  defs(cfg)            -> {name: ParamDef}     (param schema, incl. logical axes)
+  fwd(p, x, ...)       -> output               (train / prefill; returns KV)
+  decode(p, x, cache)  -> output, new_cache    (single-token step)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import (ParamDef, apply_rope, attention_decode,
+                                 flash_attention, rms_norm)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+def gqa_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, q, kv, dh = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, q), ("embed", "q_proj")),
+        "wk": ParamDef((d, kv), ("embed", "kv_proj")),
+        "wv": ParamDef((d, kv), ("embed", "kv_proj")),
+        "wo": ParamDef((q, d), ("q_proj", "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((dh,), (None,), init="ones", dtype="float32")
+        defs["k_norm"] = ParamDef((dh,), (None,), init="ones", dtype="float32")
+    return defs
+
+
+def gqa_project(p, x: jax.Array, cfg: ModelConfig, positions: jax.Array,
+                rope: bool = True):
+    b, s, _ = x.shape
+    h, kvh, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, h, dh)
+    k = (x @ p["wk"]).reshape(b, s, kvh, dh)
+    v = (x @ p["wv"]).reshape(b, s, kvh, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_fwd(p, x: jax.Array, cfg: ModelConfig, *, causal: bool = True,
+            window: int = 0, positions: Optional[jax.Array] = None,
+            kv_override: Optional[Tuple[jax.Array, jax.Array]] = None,
+            rope: bool = True) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q, k, v = gqa_project(p, x, cfg, positions, rope=rope)
+    if kv_override is not None:            # cross-attention: KV from encoder
+        k, v = kv_override
+        causal = False
+    out = flash_attention(q, k, v, causal=causal, chunk=cfg.attn_chunk,
+                          window=window)
+    out = out.reshape(b, s, cfg.q_dim) @ p["wo"]
+    return out, (k, v)
+
+
+def gqa_decode(p, x: jax.Array, cfg: ModelConfig, cache: Dict[str, jax.Array],
+               *, window: int = 0, rope: bool = True
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B, 1, D]. cache: {"k": [B,T,KvH,Dh], "v": ..., "len": [] int32}.
+
+    For sliding-window layers the cache is a ring buffer of size window;
+    for global layers it is the full T buffer.
+    """
+    b = x.shape[0]
+    t = cache["k"].shape[1]
+    kv_len = cache["len"]
+    positions = kv_len[None, None].repeat(b, 0)            # [B, 1]
+    q, k, v = gqa_project(p, x, cfg, positions, rope=rope)
+    slot = jnp.mod(kv_len, t) if window else kv_len
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k, (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v, (0, slot, 0, 0))
+    new_len = kv_len + 1
+    if window:
+        # ring buffer: all t entries valid once len >= t; positions irrelevant
+        # because ring stores only the last `t` keys.
+        valid = jnp.minimum(new_len, t)
+        out = attention_decode(q, k_cache, v_cache, valid, window=0)
+    else:
+        out = attention_decode(q, k_cache, v_cache, new_len, window=0)
+    out = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return out, {"k": k_cache, "v": v_cache, "len": new_len}
+
+
+def gqa_decode_cross(p, x: jax.Array, cfg: ModelConfig,
+                     enc_kv: Tuple[jax.Array, jax.Array],
+                     enc_len: jax.Array) -> jax.Array:
+    """Cross-attention during decode: static encoder KV, no cache update."""
+    b = x.shape[0]
+    positions = jnp.zeros((b, 1), jnp.int32)
+    q, _, _ = gqa_project(p, x, cfg, positions, rope=False)
+    out = attention_decode(q, enc_kv[0], enc_kv[1], enc_len)
+    return out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2): low-rank compressed KV cache + absorbed decode.
+# ---------------------------------------------------------------------------
+def mla_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qd = h * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+    return {
+        "wq": ParamDef((d, qd), ("embed", "q_proj")),
+        "w_dkv": ParamDef((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                          ("embed", None)),
+        "kv_norm": ParamDef((m.kv_lora_rank,), (None,), init="ones",
+                            dtype="float32"),
+        "w_uk": ParamDef((m.kv_lora_rank, h * m.qk_nope_head_dim),
+                         ("kv_lora", "q_proj")),
+        "w_uv": ParamDef((m.kv_lora_rank, h * m.v_head_dim),
+                         ("kv_lora", "q_proj")),
+        "wo": ParamDef((h * m.v_head_dim, d), ("q_proj", "embed")),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = (x @ p["wq"]).reshape(b, s, h, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p, x, cfg, positions):
+    m = cfg.mla
+    ckv_kr = x @ p["w_dkv"]
+    ckv, k_rope = jnp.split(ckv_kr, [m.kv_lora_rank], axis=-1)
+    ckv = rms_norm(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)
+    return ckv, k_rope[..., 0, :]          # [B,S,lora], [B,S,rope_dim]
+
+
+def mla_fwd(p, x: jax.Array, cfg: ModelConfig, *,
+            positions: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    """Training / prefill MLA: expand K/V then blockwise attention.
+
+    Returns (out, (ckv, k_rope)) — the *compressed* cache (MLA's point).
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :].repeat(b, 0)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, k_rope = _mla_ckv(p, x, cfg, positions)
+    k_nope = (ckv @ p["w_uk"]).reshape(b, s, h, m.qk_nope_head_dim)
+    v = (ckv @ p["w_uv"]).reshape(b, s, h, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (b, s, h, m.qk_rope_head_dim))], axis=-1)
+    # pad v to match q/k head_dim for the shared flash kernel, then slice.
+    dh = m.qk_nope_head_dim + m.qk_rope_head_dim
+    v_pad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, dh - m.v_head_dim)))
+    out = flash_attention(q, k, v_pad, causal=True, chunk=cfg.attn_chunk)
+    out = out[..., :m.v_head_dim].reshape(b, s, h * m.v_head_dim) @ p["wo"]
+    return out, (ckv, k_rope)
+
+
+def mla_decode(p, x: jax.Array, cfg: ModelConfig, cache: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Absorbed-matrix decode: score/value computed in the 512-dim latent
+    space against the compressed cache — O(H * lora * T) instead of
+    re-expanding K/V (the beyond-paper MLA serving optimisation).
+
+    cache: {"ckv": [B,T,lora], "k_rope": [B,T,rope], "len": []}.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    kv_len = cache["len"]
+    positions = kv_len[None, None].repeat(b, 0)
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)          # [B,1,H,*]
+    ckv_new, kr_new = _mla_ckv(p, x, cfg, positions)
+    ckv = jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, kv_len, 0))
+    kr = jax.lax.dynamic_update_slice(cache["k_rope"], kr_new, (0, kv_len, 0))
+    new_len = kv_len + 1
+    # absorb W_uk into q: q_lat [B,H,lora]
+    w_uk = p["w_uk"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhd,lhd->bhl", q_nope[:, 0].astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s_nope = jnp.einsum("bhl,btl->bht", q_lat, ckv.astype(jnp.float32))
+    s_rope = jnp.einsum("bhd,btd->bht", q_rope[:, 0].astype(jnp.float32),
+                        kr.astype(jnp.float32))
+    s = (s_nope + s_rope) * scale
+    t = ckv.shape[1]
+    mask = jnp.arange(t)[None, None, :] < new_len
+    s = jnp.where(mask, s, -jnp.inf)
+    prob = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bht,btl->bhl", prob, ckv.astype(jnp.float32))
+    w_uv = p["w_uv"].reshape(m.kv_lora_rank, h, m.v_head_dim)
+    out = jnp.einsum("bhl,lhd->bhd", o_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, h * m.v_head_dim).astype(x.dtype) @ p["wo"]
+    return out, {"ckv": ckv, "k_rope": kr, "len": new_len}

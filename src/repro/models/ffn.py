@@ -1,0 +1,145 @@
+"""FFN modules: dense (SwiGLU / squared-ReLU / GeGLU) and token-choice MoE.
+
+The MoE dispatch is sort-free and SPMD-friendly: per-expert ranks come from a
+cumulative sum over a one-hot [tokens, E] matrix (XLA shards cumsum with a
+cheap carry exchange), tokens are scattered into a capacity-bounded
+[E, C, D] buffer, experts run as one batched matmul, and results gather back.
+Two sharding modes exist (picked by divisibility, see parallel/sharding.py):
+  - EP:   experts sharded over the `model` axis (DeepSeek: 64/16 = 4/shard)
+  - TP:   expert-internal d_ff sharding with capacity sharded over data
+          (Grok: 8 experts % 16 != 0)
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import ParamDef, squared_relu
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN
+# ---------------------------------------------------------------------------
+def dense_defs(cfg: ModelConfig, d_ff: int = 0) -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff or cfg.d_ff
+    defs = {
+        "w1": ParamDef((d, f), ("embed", "mlp")),
+        "w2": ParamDef((f, d), ("mlp", "embed")),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        defs["w3"] = ParamDef((d, f), ("embed", "mlp"))
+    return defs
+
+
+def dense_fwd(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    h = x @ p["w1"]
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(x @ p["w3"]) * h
+    elif cfg.activation == "geglu":
+        h = jax.nn.gelu(x @ p["w3"]) * h
+    elif cfg.activation == "squared_relu":
+        h = squared_relu(h)
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    mo = cfg.moe
+    d, e, f = cfg.d_model, mo.num_experts, mo.d_ff_expert
+    defs = {
+        "router": ParamDef((d, e), ("embed", None), dtype="float32"),
+        "w1": ParamDef((e, d, f), ("experts", "embed", "expert_mlp"),
+                       scale_axis=1),
+        "w3": ParamDef((e, d, f), ("experts", "embed", "expert_mlp"),
+                       scale_axis=1),
+        "w2": ParamDef((e, f, d), ("experts", "expert_mlp", "embed"),
+                       scale_axis=1),
+    }
+    if mo.num_shared:
+        fs = mo.num_shared * f
+        defs["shared_w1"] = ParamDef((d, fs), ("embed", "mlp"))
+        defs["shared_w3"] = ParamDef((d, fs), ("embed", "mlp"))
+        defs["shared_w2"] = ParamDef((fs, d), ("mlp", "embed"))
+    return defs
+
+
+def _gate(h: jax.Array, gate: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.activation in ("swiglu",):
+        return jax.nn.silu(gate) * h
+    return jax.nn.gelu(gate) * h
+
+
+def moe_capacity(mo: MoEConfig, num_tokens: int) -> int:
+    c = int(num_tokens * mo.top_k * mo.capacity_factor / mo.num_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe_fwd(p, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Deterministic capacity-based token-choice routing with overflow drop
+    (dropped tokens fall through via the residual / shared experts).
+    """
+    from repro.parallel.constraints import constrain_batch
+    mo = cfg.moe
+    b, s, d = x.shape
+    tokens = b * s
+    e, k = mo.num_experts, mo.top_k
+    xt = constrain_batch(x.reshape(tokens, d))
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # [T, k]
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)                                        # [E]
+    ce = jnp.zeros(e, jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (tokens * k))
+    aux = e * jnp.sum(me * ce)
+
+    # --- dispatch ---------------------------------------------------------
+    c = moe_capacity(mo, tokens)
+    flat_e = top_i.reshape(-1)                                # [T*k]
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)       # [T*k, E]
+    rank = (jnp.cumsum(onehot, axis=0) - onehot)              # rank BEFORE self
+    rank = jnp.take_along_axis(rank, flat_e[:, None], axis=1)[:, 0]
+    keep = rank < c
+    slot = jnp.where(keep, flat_e * c + rank, e * c)          # drop -> sentinel
+    # NB (EXPERIMENTS.md perf iteration 7, refuted): two alternative
+    # dispatch formulations (expert-sharding constraints; index-scatter +
+    # payload-gather) were measured at 512-way SPMD and both INCREASED
+    # collective traffic (79 -> 89 / 101 GiB per device). The dominant
+    # all-reduce term is the per-layer TP activation reduction, not this
+    # scatter — so the simplest formulation stays.
+    xr = jnp.repeat(xt, k, axis=0)                            # [T*k, D]
+    buf = jnp.zeros((e * c + 1, d), x.dtype).at[slot].add(
+        jnp.where(keep[:, None], xr, 0))
+    buf = buf[:-1].reshape(e, c, d)
+
+    # --- expert compute (batched matmul; sharded over experts or d_ff) ----
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    h = _gate(h, g, cfg)
+    eo = jnp.einsum("ecf,efd->ecd", h, p["w2"])               # [E, C, D]
+
+    # --- combine ----------------------------------------------------------
+    eo_flat = jnp.concatenate(
+        [eo.reshape(e * c, d), jnp.zeros((1, d), eo.dtype)], axis=0)
+    back = eo_flat[slot]                                      # [T*k, D]
+    back = back.reshape(tokens, k, d)
+    out = jnp.sum(back * top_w[..., None].astype(back.dtype), axis=1)
+
+    if mo.num_shared:
+        sh = xt @ p["shared_w1"]
+        sh = _gate(sh, xt @ p["shared_w3"], cfg) if "shared_w3" in p else sh
+        out = out + sh @ p["shared_w2"]
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,319 @@
+"""Core model layers, written as pure functions over param pytrees.
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays. Layer-stacked modules carry a
+  leading ``L`` axis on every leaf and are driven by ``jax.lax.scan``.
+- Every ``init_*`` function has a matching ``spec_*`` in
+  ``repro/parallel/sharding.py`` built from the *logical axis* annotations
+  returned by ``*_axes`` helpers here, so init and sharding cannot drift.
+- Attention over long sequences uses a blockwise (flash-style) softmax
+  implemented with ``lax.scan`` over KV chunks so that the S x S score
+  matrix is never materialised — this is what makes the 32k prefill and
+  4k train cells compile within HBM budgets at 512-way SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Param schema: every parameter is declared once with shape + logical axes.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]   # logical axis names, len == len(shape)
+    init: str = "normal"              # normal | zeros | ones
+    scale_axis: int = 0               # fan-in axis for normal init
+    dtype: Optional[str] = None       # override config dtype (e.g. fp32 norms)
+
+
+def init_from_defs(defs: Dict[str, ParamDef], key: jax.Array,
+                   dtype: jnp.dtype) -> Params:
+    flat = {}
+    names = sorted(defs)
+    keys = jax.random.split(key, len(names))
+    for k, name in zip(keys, names):
+        d = defs[name]
+        dt = jnp.dtype(d.dtype) if d.dtype else dtype
+        if d.init == "zeros":
+            flat[name] = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            flat[name] = jnp.ones(d.shape, dt)
+        else:
+            fan_in = max(1, d.shape[d.scale_axis])
+            w = jax.random.normal(k, d.shape, jnp.float32)
+            flat[name] = (w * (fan_in ** -0.5)).astype(dt)
+    return unflatten(flat)
+
+
+def unflatten(flat: Dict[str, jax.Array]) -> Params:
+    tree: Params = {}
+    for name, v in flat.items():
+        parts = name.split("/")
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = v
+    return tree
+
+
+# ---------------------------------------------------------------------------
+# Basic ops
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale.astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                         # [Dh/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos = jnp.cos(angles)[..., None, :]                   # [..., S, 1, Dh/2]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, gate: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate) * x
+
+
+def squared_relu(x: jax.Array) -> jax.Array:
+    r = jax.nn.relu(x)
+    return r * r
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention in pure jnp — the compile-target path.
+# The Pallas TPU kernel equivalents live in repro/kernels; on this CPU-only
+# substrate the jitted model path uses this implementation, while the Pallas
+# kernels are validated in interpret mode against repro/kernels/ref.py.
+# ---------------------------------------------------------------------------
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, chunk: int, window: int = 0,
+                    q_offset: int = 0) -> jax.Array:
+    """Blockwise attention.
+
+    q: [B, Sq, H, Dh]; k, v: [B, Sk, KvH, Dh]. Grouped-query: H % KvH == 0.
+    ``window > 0`` restricts attention to the last ``window`` keys
+    (sliding-window attention). ``q_offset`` is the absolute position of
+    q[0] relative to k[0] (for chunked prefill / decode).
+    Never materialises the [Sq, Sk] score matrix: scans KV chunks carrying
+    running (max, sum, acc).
+
+    Causal self-attention (q_offset == 0, Sq == Sk, both divisible by the
+    chunk) takes the block-skipping path: each q-block attends only to
+    KV chunks at/below the diagonal, and only the diagonal chunk pays the
+    masking chain — 0.5x the score work of the rectangle-then-mask
+    formulation (perf iteration 4); sliding windows additionally skip
+    chunks left of the band.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    if causal and q_offset == 0 and sq == sk and sq % chunk == 0 and \
+            sq // chunk > 1:
+        return _flash_causal_blocks(q, k, v, chunk=chunk, window=window)
+    return _flash_scan_all(q, k, v, causal=causal, chunk=chunk,
+                           window=window, q_offset=q_offset)
+
+
+def _flash_scan_all(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, chunk: int, window: int = 0,
+                    q_offset: int = 0) -> jax.Array:
+    """Reference path: scan every KV chunk for the full q block."""
+    from repro.parallel.constraints import constrain_batch
+    b, sq, h, dh = q.shape
+    sk, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    scale = dh ** -0.5
+    # keep q/k/v in their storage dtype (bf16 on TPU): the score matmul
+    # accumulates in f32 via preferred_element_type without materialising
+    # f32 copies of the KV stream (2-3x HBM-traffic saving; EXPERIMENTS.md
+    # perf iteration 1).
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qf = constrain_batch(qf.reshape(b, sq, kvh, groups, dh))
+
+    nchunks = max(1, (sk + chunk - 1) // chunk)
+    pad = nchunks * chunk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nchunks, chunk, kvh, dh)
+    vc = v.reshape(b, nchunks, chunk, kvh, dh)
+    kc = constrain_batch(jnp.moveaxis(kc, 1, 0), 1)   # [N, B, C, KvH, Dh]
+    vc = constrain_batch(jnp.moveaxis(vc, 1, 0), 1)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    # jax.checkpoint: without it, the scan saves the stacked per-chunk
+    # [N, B, Sq, KvH, G, C] probabilities for backward — the exact O(S^2)
+    # memory blow-up blockwise attention exists to avoid.
+    @jax.checkpoint
+    def body(carry, xs):
+        m, l, acc = carry
+        kb, vb, cidx = xs
+        k_pos = cidx * chunk + jnp.arange(chunk)
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qf, kb,
+                       preferred_element_type=jnp.float32)  # [B,Sq,KvH,G,C]
+        mask = k_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((sq, chunk), bool)
+        if window:
+            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+        mask = mask & (k_pos < sk)[None, :]                # kill padding
+        s = jnp.where(mask[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, sq, kvh, groups), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, sq, kvh, groups), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, groups, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def _flash_causal_blocks(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         chunk: int, window: int = 0) -> jax.Array:
+    """Causal blockwise attention with diagonal-band skipping.
+
+    For q-block i: interior chunks j < i are processed UNMASKED by a
+    lax.scan (no score-sized select/where at all); the diagonal chunk is
+    handled once with the triangular mask. A sliding window further
+    restricts interior chunks to the band [i - ceil(w/chunk), i), with the
+    left band edge masked.
+    """
+    from repro.parallel.constraints import constrain_batch
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    groups = h // kvh
+    nq = sq // chunk
+    scale = dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qb = constrain_batch(
+        jnp.moveaxis(qf.reshape(b, nq, chunk, kvh, groups, dh), 1, 0), 1)
+    kc = constrain_batch(
+        jnp.moveaxis(k.reshape(b, nq, chunk, kvh, dh), 1, 0), 1)
+    vc = constrain_batch(
+        jnp.moveaxis(v.reshape(b, nq, chunk, kvh, dh), 1, 0), 1)
+
+    wchunks = (window + chunk - 1) // chunk if window else nq
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))     # diagonal mask
+    if window:
+        tri = tri & ~jnp.tril(jnp.ones((chunk, chunk), bool), -window)
+
+    def make_interior(qi_blk, qi_idx):
+        # NB: a FRESH callable per q-block — lax.scan caches the traced
+        # jaxpr on function identity, so a shared closure would silently
+        # reuse the first block's captured q.
+        def interior(carry, xs):
+            m, l, acc = carry
+            kb, vb, kj = xs                            # kj: chunk index
+            s = jnp.einsum("bqkgd,bckd->bqkgc", qi_blk, kb,
+                           preferred_element_type=jnp.float32)
+            if window:
+                # mask only the band's left edge; interior chunks inside
+                # the band are unmasked.
+                q_pos = qi_idx * chunk + jnp.arange(chunk)
+                k_pos = kj * chunk + jnp.arange(chunk)
+                edge = (k_pos[None, :] > q_pos[:, None] - window)
+                s = jnp.where(edge[None, :, None, None, :], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p.astype(vb.dtype), vb,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+        return jax.checkpoint(interior)
+
+    outs = []
+    for i in range(nq):
+        lo = max(0, i - wchunks) if window else 0
+        m0 = jnp.full((b, chunk, kvh, groups), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, chunk, kvh, groups), jnp.float32)
+        a0 = jnp.zeros((b, chunk, kvh, groups, dh), jnp.float32)
+        carry = (m0, l0, a0)
+        if i > lo:
+            idx = jnp.arange(lo, i, dtype=jnp.int32)
+            carry, _ = jax.lax.scan(make_interior(qb[i], i), carry,
+                                    (kc[lo:i], vc[lo:i], idx))
+        # diagonal chunk (triangular +/- window-edge mask)
+        m, l, acc = carry
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qb[i], kc[i],
+                       preferred_element_type=jnp.float32)
+        s = jnp.where(tri[None, :, None, None, :], s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vc.dtype), vc[i],
+            preferred_element_type=jnp.float32)
+        outs.append(acc / jnp.maximum(l, 1e-30)[..., None])
+    out = jnp.stack(outs, axis=1)                      # [B, NQ, C, KvH, G, Dh]
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def attention_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, window: int = 0) -> jax.Array:
+    """One-token decode attention. q: [B, 1, H, Dh]; caches [B, T, KvH, Dh].
+
+    ``kv_len``: scalar or [B] number of valid cache entries (q's position is
+    kv_len - 1 after the current token's KV has been written).
+    """
+    b, _, h, dh = q.shape
+    t, kvh = k_cache.shape[1], k_cache.shape[2]
+    groups = h // kvh
+    scale = dh ** -0.5
+    # bf16 cache reads with f32 accumulation: the KV stream is the decode
+    # step's dominant HBM traffic — never materialise f32 copies of it.
+    qf = ((q.astype(jnp.float32) * scale).astype(k_cache.dtype)
+          .reshape(b, kvh, groups, dh))
+    s = jnp.einsum("bkgd,btkd->bkgt", qf, k_cache,
+                   preferred_element_type=jnp.float32)     # [B,KvH,G,T]
+    pos = jnp.arange(t)
+    kv_len = jnp.asarray(kv_len)
+    kv_len_b = kv_len if kv_len.ndim else kv_len[None].repeat(b)
+    mask = pos[None, :] < kv_len_b[:, None]                # [B, T]
+    if window:
+        mask = mask & (pos[None, :] >= kv_len_b[:, None] - window)
+    s = jnp.where(mask[:, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, dh).astype(q.dtype)

@@ -1,0 +1,186 @@
+"""Mamba-2 SSD (state-space duality) block, chunked-dual-form training and
+O(1)-per-token recurrent decode. [arXiv:2405.21060]
+
+Training uses the SSD chunked algorithm: within a chunk the contribution is
+an attention-like quadratic term masked by the cumulative decay; across
+chunks a small recurrent state [B, nh, hd, ds] is carried by a scan. This is
+the TPU-friendly formulation (dense matmuls of chunk x chunk and
+chunk x state shape, no per-token sequential scan).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef, rms_norm
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        # fused in_proj -> [z, xBC, dt]
+        "in_proj": ParamDef((d, 2 * di + 2 * s.n_groups * s.d_state + nh),
+                            ("embed", "ssm_inner")),
+        "conv_w": ParamDef((s.d_conv, conv_ch), (None, "ssm_inner"),
+                           scale_axis=0),
+        "conv_b": ParamDef((conv_ch,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_heads",), init="zeros", dtype="float32"),
+        "dt_bias": ParamDef((nh,), ("ssm_heads",), init="zeros",
+                            dtype="float32"),
+        "D": ParamDef((nh,), ("ssm_heads",), init="ones", dtype="float32"),
+        "norm": ParamDef((di,), ("ssm_inner",), init="ones", dtype="float32"),
+        "out_proj": ParamDef((di, d), ("ssm_inner", "embed")),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    gs = s.n_groups * s.d_state
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * gs], axis=-1)
+    return z, xBC, dt, di, nh, gs
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d. xBC: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + xBC.shape[1], :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+                C: jax.Array, chunk: int,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD dual form.
+
+    x: [B, S, nh, hd]; dt: [B, S, nh] (post-softplus); A: [nh] (negative);
+    B, C: [B, S, G, ds] with G == 1 (broadcast over heads).
+    Returns (y [B, S, nh, hd], final_state [B, nh, hd, ds]).
+    """
+    from repro.parallel.constraints import constrain_batch
+    b, s, nh, hd = x.shape
+    ds = B.shape[-1]
+    nc = s // chunk
+    assert nc * chunk == s, (s, chunk)
+    f32 = jnp.float32
+
+    xc = constrain_batch(x.reshape(b, nc, chunk, nh, hd).astype(f32))
+    dtc = dt.reshape(b, nc, chunk, nh).astype(f32)
+    Bc = B.reshape(b, nc, chunk, ds).astype(f32)     # G == 1 squeezed
+    Cc = C.reshape(b, nc, chunk, ds).astype(f32)
+
+    dA = dtc * A.astype(f32)[None, None, None, :]               # [B,NC,Q,nh]
+    seg = jnp.cumsum(dA, axis=2)                                # within-chunk
+    total = seg[:, :, -1, :]                                    # [B,NC,nh]
+
+    # --- intra-chunk (quadratic) term ---
+    # L[i,j] = exp(seg_i - seg_j) for i >= j
+    li = seg[:, :, :, None, :] - seg[:, :, None, :, :]          # [B,NC,Q,Q,nh]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    cb = jnp.einsum("bnid,bnjd->bnij", Cc, Bc)                  # [B,NC,Q,Q]
+    xdt = xc * dtc[..., None]                                   # [B,NC,Q,nh,hd]
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", cb, L, xdt)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(total[:, :, None, :] - seg)          # [B,NC,Q,nh]
+    states = jnp.einsum("bnqd,bnqh,bnqhp->bnhpd",
+                        Bc, decay_to_end * dtc, xc)             # [B,NC,nh,hd,ds]
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    def scan_fn(carry, inp):
+        st, tot = inp
+        new = carry * jnp.exp(tot)[..., None, None] + st
+        return new, carry                                       # emit PREVIOUS
+
+    init = (jnp.zeros((b, nh, hd, ds), f32) if init_state is None
+            else init_state.astype(f32))
+    states_t = jnp.moveaxis(states, 1, 0)                       # [NC,B,nh,hd,ds]
+    total_t = jnp.moveaxis(total, 1, 0)                         # [NC,B,nh]
+    final, prev_states = jax.lax.scan(scan_fn, init, (states_t, total_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # [B,NC,nh,hd,ds]
+
+    # --- inter-chunk contribution ---
+    decay_from_start = jnp.exp(seg)                             # [B,NC,Q,nh]
+    y_inter = jnp.einsum("bnqd,bnqh,bnhpd->bnqhp",
+                         Cc, decay_from_start, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final
+
+
+def ssm_fwd(p, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full Mamba-2 block forward (train / prefill). x: [B, S, D]."""
+    s_cfg = cfg.ssm
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt, di, nh, gs = _split_proj(cfg, zxbcdt)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, B, C = jnp.split(xBC, [di, di + gs], axis=-1)
+    bsz, slen = xs.shape[0], xs.shape[1]
+    hd = s_cfg.head_dim
+    xh = xs.reshape(bsz, slen, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bh = B.reshape(bsz, slen, s_cfg.n_groups, s_cfg.d_state)
+    Ch = C.reshape(bsz, slen, s_cfg.n_groups, s_cfg.d_state)
+    y, _ = ssd_chunked(xh, dt, A, Bh, Ch, s_cfg.chunk_size)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[..., None]
+    y = y.reshape(bsz, slen, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def ssm_init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, x: jax.Array, cfg: ModelConfig, cache: Dict[str, jax.Array]
+               ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Single-token recurrent step. x: [B, 1, D]."""
+    s_cfg = cfg.ssm
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt, di, nh, gs = _split_proj(cfg, zxbcdt)
+    # conv ring: concat cached K-1 inputs with current
+    window = jnp.concatenate([cache["conv"], xBC], axis=1)     # [B, K, C]
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32), w)
+    conv_out = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    xs, B, C = jnp.split(conv_out.astype(x.dtype), [di, di + gs], axis=-1)
+    bsz = xs.shape[0]
+    hd = s_cfg.head_dim
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32)
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))   # [B, nh]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    Bh = B.reshape(bsz, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32)[:, 0]
+    Ch = C.reshape(bsz, s_cfg.n_groups, s_cfg.d_state).astype(jnp.float32)[:, 0]
+    decay = jnp.exp(dt1 * A[None, :])                           # [B, nh]
+    upd = jnp.einsum("bh,bhp,bd->bhpd", dt1, xh, Bh)
+    state = cache["state"] * decay[..., None, None] + upd
+    y = jnp.einsum("bhpd,bd->bhp", state, Ch)
+    y = y + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    new_cache = {"conv": window[:, 1:], "state": state}
+    return y @ p["out_proj"], new_cache

@@ -1,0 +1,470 @@
+"""Model assembly for all assigned architecture families.
+
+A single functional ``Model`` wraps config-driven dispatch:
+
+- dense / vlm / moe / mla archs: pre-norm residual blocks, ``lax.scan`` over a
+  stacked layer pytree (+ optional leading unstacked dense layer for
+  DeepSeek's first_moe_layer=1), remat per layer.
+- ssm (Mamba-2): pure SSD blocks, scanned.
+- hybrid (Hymba): parallel attention+SSM heads; layers are *unrolled* because
+  the per-layer attention window (SWA vs 3 global layers) and the per-layer
+  decode cache shapes are heterogeneous.
+- audio (Seamless): encoder-decoder; encoder is a scanned bidirectional
+  stack over frame embeddings, decoder adds cross-attention.
+- vlm (LLaVA): patch-embedding adapter prepended to the text stream.
+
+API (all pure functions of (params, batch)):
+  init / abstract_params
+  loss(params, batch)                       -> scalar  (training objective)
+  prefill(params, batch)                    -> (last_logits, cache)
+  decode_step(params, cache, tokens)        -> (logits, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ffn as ffn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import ParamDef, init_from_defs, rms_norm, unflatten
+
+Params = Dict[str, Any]
+
+VISION_EMBED_DIM = 1152     # stubbed vision tower output (SigLIP-like)
+AUDIO_FEAT_DIM = 160        # stubbed fbank features (80 mel x 2 stacking)
+ENC_LEN_AT_DECODE = 4096    # encoder length used by enc-dec decode shapes
+
+
+# ---------------------------------------------------------------------------
+# Param schema
+# ---------------------------------------------------------------------------
+def _stack(defs: Dict[str, ParamDef], n: int) -> Dict[str, ParamDef]:
+    return {k: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                        d.scale_axis + 1, d.dtype) for k, d in defs.items()}
+
+
+def _layer_defs(cfg: ModelConfig, moe_layer: bool) -> Dict[str, ParamDef]:
+    """Defs for one decoder layer (unstacked)."""
+    d = cfg.d_model
+    defs: Dict[str, ParamDef] = {}
+    if cfg.family == "ssm":
+        defs["ssm_norm_in"] = ParamDef((d,), ("embed",), init="ones",
+                                       dtype="float32")
+        for k, v in ssm_mod.ssm_defs(cfg).items():
+            defs[f"ssm/{k}"] = v
+        return defs
+    defs["attn_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                 dtype="float32")
+    amod = attn_mod.mla_defs(cfg) if cfg.attention == "mla" \
+        else attn_mod.gqa_defs(cfg)
+    for k, v in amod.items():
+        defs[f"attn/{k}"] = v
+    if cfg.hybrid:
+        for k, v in ssm_mod.ssm_defs(cfg).items():
+            defs[f"ssm/{k}"] = v
+        defs["attn_out_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                         dtype="float32")
+        defs["ssm_out_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                        dtype="float32")
+    if cfg.enc_dec:
+        defs["cross_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                      dtype="float32")
+        for k, v in attn_mod.gqa_defs(cfg).items():
+            defs[f"cross/{k}"] = v
+    defs["ffn_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                dtype="float32")
+    if moe_layer:
+        for k, v in ffn_mod.moe_defs(cfg).items():
+            defs[f"moe/{k}"] = v
+    else:
+        dff = 0
+        if cfg.moe is not None and cfg.moe.dense_d_ff:
+            dff = cfg.moe.dense_d_ff
+        for k, v in ffn_mod.dense_defs(cfg, dff).items():
+            defs[f"ffn/{k}"] = v
+    return defs
+
+
+def param_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    v, d = cfg.padded_vocab, cfg.d_model
+    defs: Dict[str, ParamDef] = {
+        "embed": ParamDef((v, d), ("vocab", "embed")),
+        "final_norm": ParamDef((d,), ("embed",), init="ones",
+                               dtype="float32"),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, v), ("embed", "vocab"))
+    if cfg.frontend == "patches":
+        defs["adapter/w"] = ParamDef((VISION_EMBED_DIM, d), (None, "embed"))
+        defs["adapter/b"] = ParamDef((d,), ("embed",), init="zeros")
+    if cfg.frontend == "frames":
+        defs["adapter/w"] = ParamDef((AUDIO_FEAT_DIM, d), (None, "embed"))
+        defs["adapter/b"] = ParamDef((d,), ("embed",), init="zeros")
+
+    n_moe_prefix = cfg.moe.first_moe_layer if cfg.moe else 0
+    n_scan = cfg.num_layers - n_moe_prefix
+    if cfg.hybrid:
+        # unrolled: one subtree per layer (heterogeneous windows/caches)
+        for i in range(cfg.num_layers):
+            for k, vdef in _layer_defs(cfg, moe_layer=False).items():
+                defs[f"layer_{i:02d}/{k}"] = vdef
+    else:
+        for i in range(n_moe_prefix):
+            for k, vdef in _layer_defs(cfg, moe_layer=False).items():
+                defs[f"dense_{i}/{k}"] = vdef
+        for k, vdef in _stack(
+                _layer_defs(cfg, moe_layer=cfg.moe is not None),
+                n_scan).items():
+            defs[f"layers/{k}"] = vdef
+    if cfg.enc_dec:
+        enc_cfg = cfg
+        enc_defs: Dict[str, ParamDef] = {
+            "attn_norm": ParamDef((d,), ("embed",), init="ones",
+                                  dtype="float32"),
+            "ffn_norm": ParamDef((d,), ("embed",), init="ones",
+                                 dtype="float32"),
+        }
+        for k, vdef in attn_mod.gqa_defs(enc_cfg).items():
+            enc_defs[f"attn/{k}"] = vdef
+        for k, vdef in ffn_mod.dense_defs(enc_cfg).items():
+            enc_defs[f"ffn/{k}"] = vdef
+        for k, vdef in _stack(enc_defs, cfg.encoder_layers).items():
+            defs[f"encoder/{k}"] = vdef
+        defs["enc_norm"] = ParamDef((d,), ("embed",), init="ones",
+                                    dtype="float32")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _mixer(p, x, cfg: ModelConfig, *, window: int,
+           kv_out: bool = False):
+    """Sequence mixer for train/prefill: attention and/or SSM."""
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps) if "attn_norm" in p else x
+    kv = None
+    if cfg.family == "ssm":
+        h_in = rms_norm(x, p["ssm_norm_in"], cfg.norm_eps)
+        return x + ssm_mod.ssm_fwd(p["ssm"], h_in, cfg), kv
+    if cfg.attention == "mla":
+        out, kv = attn_mod.mla_fwd(p["attn"], h, cfg)
+    else:
+        out, kv = attn_mod.gqa_fwd(p["attn"], h, cfg, causal=True,
+                                   window=window)
+    if cfg.hybrid:
+        s_out = ssm_mod.ssm_fwd(p["ssm"], h, cfg)
+        out = 0.5 * (rms_norm(out, p["attn_out_norm"], cfg.norm_eps)
+                     + rms_norm(s_out, p["ssm_out_norm"], cfg.norm_eps))
+    from jax.ad_checkpoint import checkpoint_name
+    out = checkpoint_name(out, "mixer_out")
+    return x + out, (kv if kv_out else None)
+
+
+def _ffn_block(p, x, cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return x, 0.0
+    h = rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if "moe" in p:
+        out, aux = ffn_mod.moe_fwd(p["moe"], h, cfg)
+        return x + out, aux
+    return x + ffn_mod.dense_fwd(p["ffn"], h, cfg), 0.0
+
+
+def _decoder_layer(p, x, cfg: ModelConfig, *, window: int = 0,
+                   enc_kv=None):
+    from repro.parallel.constraints import constrain_residual
+    x = constrain_residual(x)
+    x, _ = _mixer(p, x, cfg, window=window)
+    if cfg.enc_dec and enc_kv is not None:
+        h = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        out, _ = attn_mod.gqa_fwd(p["cross"], h, cfg, kv_override=enc_kv,
+                                  rope=False)
+        x = x + out
+    x, aux = _ffn_block(p, x, cfg)
+    return x, aux
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    if cfg.remat == "save_attn":
+        # save each layer's mixer (attention/SSD) output: the backward pass
+        # re-runs only the cheap FFN/norm forward, never the blockwise
+        # attention chain (perf iteration 2) — costs one [B,S,D] residual
+        # per layer of HBM capacity.
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.save_only_these_names(
+                "mixer_out"))
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / loss
+# ---------------------------------------------------------------------------
+def _embed_tokens(params, tokens, cfg: ModelConfig):
+    return jnp.take(params["embed"], tokens, axis=0)
+
+
+def _frontend_concat(params, batch, cfg: ModelConfig):
+    """Returns (x [B,S,D], loss_mask [B,S], labels [B,S])."""
+    tokens = batch["tokens"]
+    x_txt = _embed_tokens(params, tokens, cfg)
+    if cfg.frontend == "patches":
+        emb = batch["patches"] @ params["adapter"]["w"] + params["adapter"]["b"]
+        x = jnp.concatenate([emb.astype(x_txt.dtype), x_txt], axis=1)
+        pad = jnp.zeros(emb.shape[:2], batch["labels"].dtype)
+        labels = jnp.concatenate([pad, batch["labels"]], axis=1)
+        mask = jnp.concatenate([jnp.zeros(emb.shape[:2], bool),
+                                jnp.ones(tokens.shape, bool)], axis=1)
+        return x, mask, labels
+    return x_txt, jnp.ones(tokens.shape, bool), batch["labels"]
+
+
+def chunked_ce_loss(x, lm_head, labels, mask, chunk: int = 1024):
+    """Cross-entropy computed in seq chunks so the [B,S,V] logits tensor is
+    never alive at once (V can be 256k). fp32 logsumexp."""
+    b, s, d = x.shape
+    nc = max(1, s // chunk)
+    chunk = s // nc
+    xc = x[:, :nc * chunk].reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels[:, :nc * chunk].reshape(b, nc, chunk).swapaxes(0, 1)
+    mc = mask[:, :nc * chunk].reshape(b, nc, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, inp):
+        from repro.parallel.constraints import constrain_batch
+        xb, lb, mb = inp
+        xb = constrain_batch(xb)
+        logits = (xb @ lm_head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mb, lse - gold, 0.0)
+        return (carry[0] + nll.sum(), carry[1] + mb.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (0.0, 0), (xc, lc, mc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+def _run_encoder(params, frames, cfg: ModelConfig):
+    x = frames @ params["adapter"]["w"] + params["adapter"]["b"]
+    x = x.astype(jnp.dtype(cfg.dtype))
+
+    def body(h, lp):
+        hh = rms_norm(h, lp["attn_norm"], cfg.norm_eps)
+        out, _ = attn_mod.gqa_fwd(lp["attn"], hh, cfg, causal=False)
+        h = h + out
+        h = h + ffn_mod.dense_fwd(
+            lp["ffn"], rms_norm(h, lp["ffn_norm"], cfg.norm_eps), cfg)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(body, cfg), x, params["encoder"])
+    return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def _backbone(params, x, cfg: ModelConfig, enc=None):
+    """Run the decoder stack on x [B,S,D]. Returns (x, aux_loss)."""
+    aux_total = 0.0
+    if cfg.hybrid:
+        for i in range(cfg.num_layers):
+            w = 0 if i in cfg.global_attn_layers else cfg.window
+            layer_fn = functools.partial(_decoder_layer, cfg=cfg, window=w)
+            x, aux = _maybe_remat(
+                lambda p, h: layer_fn(p, h), cfg)(params[f"layer_{i:02d}"], x)
+            aux_total += aux
+        return x, aux_total
+    n_prefix = cfg.moe.first_moe_layer if cfg.moe else 0
+    for i in range(n_prefix):
+        x, aux = _decoder_layer(params[f"dense_{i}"], x, cfg)
+        aux_total += aux
+
+    if cfg.enc_dec:
+        def body(h, lp):
+            # per-layer cross KV projected from shared encoder output
+            enc_k = (enc @ lp["cross"]["wk"]).reshape(
+                enc.shape[0], enc.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            enc_v = (enc @ lp["cross"]["wv"]).reshape(
+                enc.shape[0], enc.shape[1], cfg.num_kv_heads, cfg.head_dim)
+            h, aux = _decoder_layer(lp, h, cfg, enc_kv=(enc_k, enc_v))
+            return h, aux
+    else:
+        def body(h, lp):
+            return _decoder_layer(lp, h, cfg)
+
+    x, auxs = jax.lax.scan(_maybe_remat(body, cfg), x, params["layers"])
+    return x, aux_total + jnp.sum(auxs)
+
+
+def loss_fn(params, batch, cfg: ModelConfig) -> jax.Array:
+    if cfg.enc_dec:
+        enc = _run_encoder(params, batch["frames"], cfg)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        mask = jnp.ones(batch["tokens"].shape, bool)
+        labels = batch["labels"]
+        x, aux = _backbone(params, x, cfg, enc=enc)
+    else:
+        x, mask, labels = _frontend_concat(params, batch, cfg)
+        x, aux = _backbone(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    ce = chunked_ce_loss(x, head, labels, mask)
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype
+               ) -> Dict[str, Any]:
+    """Abstract structure of the decode cache (values are zeros)."""
+    n_prefix = cfg.moe.first_moe_layer if cfg.moe else 0
+    n_scan = cfg.num_layers - n_prefix
+
+    def one_layer(window: int):
+        if cfg.family == "ssm":
+            return {"ssm": ssm_mod.ssm_init_cache(cfg, batch, dtype)}
+        if cfg.attention == "mla":
+            m = cfg.mla
+            c = {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                 "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim),
+                                     dtype),
+                 "len": jnp.zeros((), jnp.int32)}
+        else:
+            t = min(window, max_len) if window else max_len
+            c = {"k": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                                dtype),
+                 "v": jnp.zeros((batch, t, cfg.num_kv_heads, cfg.head_dim),
+                                dtype),
+                 "len": jnp.zeros((), jnp.int32)}
+        if cfg.hybrid:
+            c = {"attn": c, "ssm": ssm_mod.ssm_init_cache(cfg, batch, dtype)}
+        return c
+
+    cache: Dict[str, Any] = {}
+    if cfg.hybrid:
+        for i in range(cfg.num_layers):
+            w = 0 if i in cfg.global_attn_layers else cfg.window
+            cache[f"layer_{i:02d}"] = one_layer(w)
+        return cache
+    for i in range(n_prefix):
+        cache[f"dense_{i}"] = one_layer(0)
+    stacked = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape), one_layer(0))
+    cache["layers"] = stacked
+    if cfg.enc_dec:
+        cache["enc_k"] = jnp.zeros(
+            (n_scan, batch, ENC_LEN_AT_DECODE, cfg.num_kv_heads,
+             cfg.head_dim), dtype)
+        cache["enc_v"] = jnp.zeros_like(cache["enc_k"])
+    return cache
+
+
+def _layer_decode(p, x, cfg: ModelConfig, cache, *, window: int = 0,
+                  enc_kv=None):
+    if cfg.family == "ssm":
+        h = rms_norm(x, p["ssm_norm_in"], cfg.norm_eps)
+        out, new_ssm = ssm_mod.ssm_decode(p["ssm"], h, cfg, cache["ssm"])
+        return x + out, {"ssm": new_ssm}
+    h = rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    attn_cache = cache["attn"] if cfg.hybrid else cache
+    if cfg.attention == "mla":
+        out, new_attn = attn_mod.mla_decode(p["attn"], h, cfg, attn_cache)
+    else:
+        out, new_attn = attn_mod.gqa_decode(p["attn"], h, cfg, attn_cache,
+                                            window=window)
+    new_cache = dict(new_attn)
+    if cfg.hybrid:
+        s_out, new_ssm = ssm_mod.ssm_decode(p["ssm"], h, cfg, cache["ssm"])
+        out = 0.5 * (rms_norm(out, p["attn_out_norm"], cfg.norm_eps)
+                     + rms_norm(s_out, p["ssm_out_norm"], cfg.norm_eps))
+        new_cache = {"attn": new_attn, "ssm": new_ssm}
+    x = x + out
+    if cfg.enc_dec and enc_kv is not None:
+        h = rms_norm(x, p["cross_norm"], cfg.norm_eps)
+        x = x + attn_mod.gqa_decode_cross(
+            p["cross"], h, cfg, enc_kv, enc_kv[0].shape[1])
+    x, _ = _ffn_block(p, x, cfg)
+    return x, new_cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig
+                ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """tokens: [B, 1] -> (logits [B, V], new cache)."""
+    x = _embed_tokens(params, tokens, cfg)
+    new_cache: Dict[str, Any] = {}
+    if cfg.hybrid:
+        for i in range(cfg.num_layers):
+            w = 0 if i in cfg.global_attn_layers else cfg.window
+            x, new_cache[f"layer_{i:02d}"] = _layer_decode(
+                params[f"layer_{i:02d}"], x, cfg,
+                cache[f"layer_{i:02d}"], window=w)
+    else:
+        n_prefix = cfg.moe.first_moe_layer if cfg.moe else 0
+        for i in range(n_prefix):
+            x, new_cache[f"dense_{i}"] = _layer_decode(
+                params[f"dense_{i}"], x, cfg, cache[f"dense_{i}"])
+
+        if cfg.enc_dec:
+            def body(h, xs):
+                lp, lc, ek, ev = xs
+                h, nc = _layer_decode(lp, h, cfg, lc, enc_kv=(ek, ev))
+                return h, nc
+            x, scan_cache = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"],
+                          cache["enc_k"], cache["enc_v"]))
+            new_cache["enc_k"] = cache["enc_k"]
+            new_cache["enc_v"] = cache["enc_v"]
+        else:
+            def body(h, xs):
+                lp, lc = xs
+                h, nc = _layer_decode(lp, h, cfg, lc)
+                return h, nc
+            x, scan_cache = jax.lax.scan(
+                body, x, (params["layers"], cache["layers"]))
+        new_cache["layers"] = scan_cache
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, 0] @ head).astype(jnp.float32)
+    return logits, new_cache
+
+
+def prefill(params, batch, cfg: ModelConfig) -> Tuple[jax.Array, Any]:
+    """Full-sequence prefill. Returns (last-position logits, kv caches as
+    produced by the forward pass — the serving layer re-packs them)."""
+    if cfg.enc_dec:
+        enc = _run_encoder(params, batch["frames"], cfg)
+        x = _embed_tokens(params, batch["tokens"], cfg)
+        x, _ = _backbone(params, x, cfg, enc=enc)
+    else:
+        x, _, _ = _frontend_concat(
+            params, {**batch, "labels": jnp.zeros_like(batch["tokens"])}, cfg)
+        x, _ = _backbone(params, x, cfg)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x[:, -1] @ head).astype(jnp.float32)
+    return logits, None
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    return init_from_defs(param_defs(cfg), key, jnp.dtype(cfg.dtype))
+
+
+def abstract_params(cfg: ModelConfig):
+    defs = param_defs(cfg)
+    flat = {k: jax.ShapeDtypeStruct(
+        d.shape, jnp.dtype(d.dtype) if d.dtype else jnp.dtype(cfg.dtype))
+        for k, d in defs.items()}
+    return unflatten(flat)

@@ -1,0 +1,99 @@
+"""Activation sharding constraints, threaded via a contextvar.
+
+Model code calls ``constrain_batch(x)`` on [B, ...] activations; when a mesh
+has been installed (dry-run / launcher), this pins the batch dim to the DP
+axes so XLA's propagation never silently replicates the large attention /
+SSD intermediates. Outside a mesh context it is the identity.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: contextvars.ContextVar[Optional[Mesh]] = contextvars.ContextVar(
+    "repro_activation_mesh", default=None)
+_SEQ_PARALLEL: contextvars.ContextVar[bool] = contextvars.ContextVar(
+    "repro_sequence_parallel", default=False)
+
+DP_AXES = ("pod", "data")
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Mesh, sequence_parallel: bool = False):
+    tok = _MESH.set(mesh)
+    tok2 = _SEQ_PARALLEL.set(sequence_parallel)
+    try:
+        yield
+    finally:
+        _MESH.reset(tok)
+        _SEQ_PARALLEL.reset(tok2)
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _MESH.get()
+
+
+def _dp(mesh: Mesh):
+    kept = tuple(a for a in DP_AXES if a in mesh.shape)
+    return kept if kept else None
+
+
+def dp_size(mesh: Mesh) -> int:
+    import numpy as np
+    dp = _dp(mesh)
+    return int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+
+
+def constrain_axis(x: jax.Array, axis: int, mesh_axis: str) -> jax.Array:
+    """Pin one dim of x to a named mesh axis (no-op without mesh / axis
+    absent / non-divisible)."""
+    mesh = _MESH.get()
+    if mesh is None or mesh_axis not in mesh.shape or \
+            x.shape[axis] % mesh.shape[mesh_axis] != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[axis] = mesh_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_batch(x: jax.Array, batch_axis: int = 0) -> jax.Array:
+    """Pin x's batch dim to the DP mesh axes (no-op without mesh /
+    non-divisible batch)."""
+    mesh = _MESH.get()
+    if mesh is None:
+        return x
+    dp = _dp(mesh)
+    if dp is None or x.shape[batch_axis] % dp_size(mesh) != 0:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_axis] = dp
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Residual-stream constraint at layer boundaries for [B, S, D]
+    activations. Default: batch over DP. With sequence parallelism on
+    (Megatron-SP style): additionally shard S over ``model`` — the saved
+    remat residuals then occupy 1/TP of the HBM per device, and XLA turns
+    the surrounding TP all-reduces into reduce-scatter + all-gather pairs
+    of the same total bytes."""
+    mesh = _MESH.get()
+    if mesh is None or x.ndim < 3:
+        return constrain_batch(x)
+    dp = _dp(mesh)
+    spec = [None] * x.ndim
+    if dp is not None and x.shape[0] % dp_size(mesh) == 0:
+        spec[0] = dp
+    if _SEQ_PARALLEL.get() and "model" in mesh.shape and \
+            x.shape[1] % mesh.shape["model"] == 0:
+        spec[1] = "model"
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

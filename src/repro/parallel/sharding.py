@@ -1,0 +1,182 @@
+"""Sharding rules: logical axes -> mesh axes, with divisibility fallbacks.
+
+Parallelism plan over the production mesh (pod, data, model):
+  - FSDP  : parameter + optimizer-state ``embed`` fan axes sharded over
+            (pod, data); XLA inserts per-layer all-gathers under scan.
+  - TP    : head/mlp/vocab axes over ``model``. Head axes are sharded only
+            when the *head count* divides the TP degree (sharding a packed
+            H*Dh axis across head boundaries would force a resharding at the
+            [B,S,H,Dh] reshape).
+  - EP    : MoE expert axis over ``model`` when num_experts divides it
+            (DeepSeek 64/16); otherwise expert-internal d_ff TP (Grok 8e).
+  - DP    : activations batch axis over (pod, data).
+  - Cache : KV-cache time axis over ``model`` when kv-head sharding is not
+            divisible (sequence-sharded decode with partial softmax), else
+            kv-head sharding.
+
+Every rule degrades to replication when the concrete dim is not divisible,
+so any (arch x shape x mesh) cell lowers without manual exceptions.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamDef
+from repro.models.transformer import param_defs
+from repro.models import ssm as ssm_mod
+
+FSDP_AXES = ("pod", "data")
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([_axis_size(mesh, a) for a in axis]))
+    return mesh.shape[axis] if axis in mesh.shape else 1
+
+
+def _present(mesh: Mesh, axis):
+    """Strip mesh axes that don't exist on this mesh (e.g. 'pod' single-pod)."""
+    if axis is None:
+        return None
+    if isinstance(axis, tuple):
+        kept = tuple(a for a in axis if a in mesh.shape)
+        return kept if kept else None
+    return axis if axis in mesh.shape else None
+
+
+def logical_rules(cfg: ModelConfig, mesh: Mesh,
+                  mode: str = "train") -> Dict[str, Any]:
+    """mode='train': FSDP over (pod, data) + TP over model.
+    mode='serve': weights replicated over the DP axes, TP only — a decode
+    step has no optimizer state and tiny activations; FSDP would force a
+    per-layer weight all-gather (or activation gather + partial-output
+    reduce) on every token (perf iteration 3)."""
+    tp = _axis_size(mesh, "model")
+    rules: Dict[str, Any] = {
+        "vocab": "model",
+        "embed": FSDP_AXES if mode == "train" else None,
+        "mlp": "model",
+        "q_proj": "model" if cfg.num_heads and cfg.num_heads % tp == 0
+        else None,
+        "kv_proj": "model" if cfg.num_kv_heads and cfg.num_kv_heads % tp == 0
+        else None,
+        "kv_lora": None,
+        "layers": None,
+        "ssm_inner": None,
+        "ssm_heads": None,
+        "batch": FSDP_AXES,
+    }
+    if cfg.moe is not None:
+        if cfg.moe.num_experts % tp == 0:
+            rules["experts"] = "model"      # EP
+            rules["expert_mlp"] = None
+        else:
+            rules["experts"] = None         # expert-internal TP
+            rules["expert_mlp"] = "model"
+    return rules
+
+
+def spec_for(shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+             rules: Dict[str, Any], mesh: Mesh) -> P:
+    """Build a PartitionSpec, dropping any axis whose dim isn't divisible."""
+    entries = []
+    used: set = set()
+    for dim, ax in zip(shape, axes):
+        phys = _present(mesh, rules.get(ax)) if ax else None
+        if phys is not None:
+            flat = phys if isinstance(phys, tuple) else (phys,)
+            if any(a in used for a in flat):
+                phys = None
+            elif dim % _axis_size(mesh, phys) != 0:
+                phys = None
+            else:
+                used.update(flat)
+        entries.append(phys)
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh,
+                    mode: str = "train") -> Dict[str, Any]:
+    """NamedSharding pytree matching ``transformer.param_defs`` structure."""
+    from repro.models.layers import unflatten
+    rules = logical_rules(cfg, mesh, mode)
+    defs = param_defs(cfg)
+    flat = {k: NamedSharding(mesh, spec_for(d.shape, d.axes, rules, mesh))
+            for k, d in defs.items()}
+    return unflatten(flat)
+
+
+# ---------------------------------------------------------------------------
+# Activations / batches / caches
+# ---------------------------------------------------------------------------
+def batch_sharding(mesh: Mesh, shape: Tuple[int, ...]) -> NamedSharding:
+    """Shard the leading (batch) dim over the DP axes when divisible."""
+    dp = _present(mesh, FSDP_AXES)
+    if dp is None or shape[0] % _axis_size(mesh, dp) != 0:
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(dp, *([None] * (len(shape) - 1))))
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache) -> Any:
+    """Shardings for the decode cache pytree (structure-driven).
+
+    KV tensors [.., B, T, KvH, Dh]: batch over DP; kv-heads over model when
+    divisible, else the time axis over model (sequence-sharded decode).
+    SSM state [.., B, nh, hd, ds]: heads over model when divisible.
+    """
+    tp = _axis_size(mesh, "model")
+    dp = _present(mesh, FSDP_AXES)
+    dpsz = _axis_size(mesh, dp)
+
+    def spec(path, leaf) -> NamedSharding:
+        names = [getattr(p, "key", getattr(p, "name", str(p)))
+                 for p in path]
+        leafname = names[-1] if names else ""
+        shape = leaf.shape
+        stacked = leafname in ("k", "v", "ckv", "k_rope", "conv", "state",
+                               "enc_k", "enc_v") and len(shape) >= 3 and \
+            "layers" in names
+        off = 1 if stacked else 0
+        ent: list = [None] * len(shape)
+        if leafname in ("k", "v", "enc_k", "enc_v") and len(shape) >= 4 + off:
+            b, t, kvh = shape[off], shape[off + 1], shape[off + 2]
+            if dp is not None and b % dpsz == 0:
+                ent[off] = dp
+            if kvh % tp == 0 and "model" in mesh.shape:
+                ent[off + 2] = "model"
+            elif t % tp == 0 and "model" in mesh.shape:
+                ent[off + 1] = "model"
+        elif leafname in ("ckv", "k_rope") and len(shape) >= 3 + off:
+            b, t = shape[off], shape[off + 1]
+            if dp is not None and b % dpsz == 0:
+                ent[off] = dp
+            if t % tp == 0 and "model" in mesh.shape:
+                ent[off + 1] = "model"
+        elif leafname == "state" and len(shape) >= 4 + off:
+            b, nh = shape[off], shape[off + 1]
+            if dp is not None and b % dpsz == 0:
+                ent[off] = dp
+            if nh % tp == 0 and "model" in mesh.shape:
+                ent[off + 1] = "model"
+        elif leafname == "conv" and len(shape) >= 3 + off:
+            if dp is not None and shape[off] % dpsz == 0:
+                ent[off] = dp
+        while ent and ent[-1] is None:
+            ent.pop()
+        return NamedSharding(mesh, P(*ent))
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def opt_state_shardings(param_sh, extra_scalars: Dict[str, Any], mesh: Mesh):
+    return {"m": param_sh, "v": param_sh,
+            **{k: NamedSharding(mesh, P()) for k in extra_scalars}}

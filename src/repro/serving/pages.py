@@ -1,0 +1,81 @@
+"""MVCC paged KV-cache store — Bohm's versioned store applied to serving.
+
+Records    = KV pages; a page is immutable once full (a "version" whose
+             end_ts is set when a successor page chain supersedes it).
+Write-set  = the (slot, page, offset) a decode step appends to — planned by
+             the scheduler (CC phase) BEFORE the model step runs, so the
+             execution phase (the jitted decode step) never coordinates.
+Read-set   = each sequence's page table. Prefix-shared pages have many
+             readers; since readers never write page state (Bohm's no-
+             writes-on-read invariant) sharing requires no refcount updates
+             on the hot path.
+GC         = Condition 3: a page retired at scheduler batch b is reusable
+             once every sequence admitted at ts <= watermark(b) has
+             finished — the scheduler advances the watermark at batch
+             boundaries only.
+
+Layout: pages[L, P, page_size, 2, KvH, Dh]; page_table[S, MaxP]; the jitted
+step receives the plan as plain arrays (slot ids, page ids, offsets).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PagedKV:
+    pages: jax.Array        # [L, P, page, 2, KvH, Dh]
+    page_table: jax.Array   # [S, MaxP] int32 (page id, -1 = unmapped)
+    seq_len: jax.Array      # [S] int32 tokens stored per slot
+
+    @property
+    def page_size(self) -> int:
+        return self.pages.shape[2]
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[1]
+
+
+def init_paged_kv(layers: int, num_pages: int, page_size: int, slots: int,
+                  max_pages_per_seq: int, kvh: int, dh: int,
+                  dtype=jnp.bfloat16) -> PagedKV:
+    return PagedKV(
+        pages=jnp.zeros((layers, num_pages, page_size, 2, kvh, dh), dtype),
+        page_table=jnp.full((slots, max_pages_per_seq), -1, jnp.int32),
+        seq_len=jnp.zeros((slots,), jnp.int32))
+
+
+def append_kv(kv: PagedKV, layer: jax.Array, k: jax.Array, v: jax.Array,
+              slot_pages: jax.Array, offsets: jax.Array,
+              active: jax.Array) -> PagedKV:
+    """Scatter one new token's K/V into planned (page, offset) positions.
+
+    k, v: [S, KvH, Dh]; slot_pages/offsets: [S] plan arrays; active: [S].
+    The plan guarantees distinct (page, offset) per active slot — no
+    write-write conflicts by construction (CC phase property).
+    """
+    P = kv.pages.shape[1]
+    page = jnp.where(active, slot_pages, P)          # sentinel drop
+    upd = jnp.stack([k, v], axis=1)                  # [S, 2, KvH, Dh]
+    pages = kv.pages.at[layer, page, offsets].set(
+        upd, mode="drop")
+    return dataclasses.replace(kv, pages=pages)
+
+
+def gather_kv(kv: PagedKV, layer: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Materialise per-slot KV streams [S, MaxP*page, KvH, Dh] via the page
+    table (logical view used by the CPU-substrate attention; the TPU target
+    is the block-table-indirect Pallas decode kernel)."""
+    pt = jnp.maximum(kv.page_table, 0)               # [S, MaxP]
+    pages = kv.pages[layer][pt]                      # [S, MaxP, page, 2, ...]
+    s, mp, ps = pages.shape[0], pages.shape[1], pages.shape[2]
+    valid = (kv.page_table >= 0)[..., None]          # [S, MaxP, 1]
+    pages = jnp.where(valid[..., None, None, None], pages, 0)
+    flat = pages.reshape(s, mp * ps, 2, pages.shape[-2], pages.shape[-1])
+    return flat[:, :, 0], flat[:, :, 1]

@@ -1,0 +1,36 @@
+"""Gradient compression for cross-pod traffic reduction.
+
+At 2+ pods the data-parallel gradient all-reduce crosses the (slow) pod
+interconnect; int8 per-tensor-scaled quantization cuts those bytes 4x
+versus fp32 (2x vs bf16) at negligible quality cost for large batches.
+Applied *before* the optimizer so the compressed tensor is exactly what a
+multi-pod deployment would put on the wire (the dequantized values feed
+AdamW, matching the deployed numerics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "int8"          # int8 | none
+    min_size: int = 4096        # don't quantize tiny tensors (norms etc.)
+
+
+def _q8(g: jax.Array) -> jax.Array:
+    gf = g.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, cfg: Optional[CompressionConfig]):
+    if cfg is None or cfg.kind == "none":
+        return grads
+    return jax.tree.map(
+        lambda g: _q8(g) if g.size >= cfg.min_size else g, grads)

@@ -1,0 +1,68 @@
+"""AdamW in pure JAX (fp32 moments over bf16 params) + global-norm clip."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init_opt_state(params) -> Dict[str, Any]:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+             for g in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig = AdamWConfig()
+                 ) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh, vh = m / b1c, v / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype)
+        return new_p, m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

