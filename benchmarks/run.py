@@ -5,6 +5,8 @@
   microbench  Fig 4   CC-shard scalability (subprocess: 8 host devices)
   ycsb        Fig 5-7 Bohm vs 2PL/SI/OCC, low/high contention + theta sweep
   smallbank   Fig 8-10 full mix + read-only vs contention
+  snapshot    Fig 9/10 scenario: update stream + pinned snapshot scans
+              through the version ring (occupancy, GC, scan survival)
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
 
@@ -41,6 +43,11 @@ def bench_smallbank(quick: bool = False):
     smallbank.run(sweep_customers=not quick)
 
 
+def bench_snapshot():
+    from benchmarks import snapshot
+    snapshot.run()
+
+
 def bench_kernels():
     from benchmarks import kernels
     kernels.run()
@@ -57,7 +64,7 @@ def main() -> None:
                     help="skip the slow sweep dimensions")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
-                         "smallbank,kernels,serving")
+                         "smallbank,snapshot,kernels,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -73,6 +80,9 @@ def main() -> None:
     if want("smallbank"):
         print("== smallbank (Figs 8-10) ==", flush=True)
         bench_smallbank(args.quick)
+    if want("snapshot"):
+        print("== snapshot (Figs 9/10 scenario) ==", flush=True)
+        bench_snapshot()
     if want("kernels"):
         print("== kernels ==", flush=True)
         bench_kernels()

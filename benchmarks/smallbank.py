@@ -20,7 +20,6 @@ import numpy as np
 from benchmarks.common import time_fn, write_csv
 from repro.core.baselines import run_2pl
 from repro.core.engine import BohmEngine
-from repro.core.execute import Store
 from repro.core.workloads import gen_smallbank_batch, make_smallbank
 
 BATCH = 2048
@@ -33,10 +32,8 @@ def bench_cell(n_customers: int, mix, label: str, rng) -> dict:
     n_records = 2 * n_customers
     batch = gen_smallbank_batch(rng, BATCH, n_customers, mix=mix)
     eng = BohmEngine(max(n_records, 2), wl)
-    eng.store = Store(base=jnp.full((max(n_records, 2), wl.payload_words),
-                                    1000, jnp.int32),
-                      base_ts=eng.store.base_ts,
-                      ts_counter=eng.store.ts_counter)
+    eng.reset_store(jnp.full((max(n_records, 2), wl.payload_words),
+                             1000, jnp.int32))
     _, metrics = eng.run_batch(batch)
     t_bohm = time_fn(eng._step, eng.store, batch, warmup=1, iters=3)
 

@@ -1,6 +1,6 @@
 """BohmEngine: the two-phase batch pipeline (CC phase -> barrier -> exec).
 
-One jitted call runs:   plan -> wavefront execute -> Condition-3 commit.
+One jitted call runs:   plan -> wavefront execute -> watermark commit.
 The CC phase can run record-partitioned over a mesh axis (``cc_shards``),
 reproducing the paper's intra-transaction parallelism; the execution phase
 is transaction-partitioned (the wavefront vector step IS the union of all
@@ -10,9 +10,19 @@ The paper overlaps CC of batch b+1 with execution of batch b (two thread
 pools). Under JAX's async dispatch the same overlap falls out for free:
 ``run_batch`` is non-blocking, so dispatching batch b+1's plan while batch
 b's execution is in flight pipelines on the device queue.
+
+Snapshot reads (paper §4.1.3 / Figs 9-10): because the commit step retains
+versions in a cross-batch ring (see versions.py), read-only transactions
+can run against OLDER snapshots while update batches stream through —
+``begin_snapshot`` pins a timestamp (holding the GC watermark down),
+``snapshot_read`` / ``run_readonly_batch`` resolve visibility through the
+Pallas ``mvcc_resolve`` kernel, and ``release_snapshot`` lets the
+watermark advance again. Read-only transactions never enter the CC phase
+and never write shared state — the paper's zero-bookkeeping read path.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Dict, Optional, Tuple
 
@@ -20,29 +30,53 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import plan as plan_mod
-from repro.core.execute import Store, commit, execute_plan, init_store
+from repro.core.execute import (Store, commit, execute_plan, init_store,
+                                store_from_base)
 from repro.core.plan import Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
+from repro.core.versions import gather_windows, ring_occupancy
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotHandle:
+    """An active reader registration; holds the GC watermark at <= ts."""
+    sid: int
+    ts: int
 
 
 class BohmEngine:
     def __init__(self, num_records: int, workload: Workload,
-                 mesh=None, cc_axis: str = "cc"):
+                 mesh=None, cc_axis: str = "cc", ring_slots: int = 4,
+                 resolve_interpret: Optional[bool] = None):
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
         self.workload = workload
         self.mesh = mesh
         self.cc_axis = cc_axis
-        self.store = init_store(num_records, workload.payload_words)
+        self.ring_slots = ring_slots
+        # None = auto-select from jax.default_backend() inside the kernel
+        self.resolve_interpret = resolve_interpret
+        self.store = init_store(num_records, workload.payload_words,
+                                ring_slots=ring_slots)
+        self._ts_next = 1                  # host mirror of store.ts_counter
+        self._snapshots: Dict[int, SnapshotHandle] = {}
+        self._next_sid = 0
         self._step = jax.jit(functools.partial(
             _bohm_step, workload=workload, mesh=mesh, cc_axis=cc_axis))
+        self._gather = jax.jit(gather_windows)
+        self._readonly = functools.partial(_readonly_resolve,
+                                           interpret=resolve_interpret)
 
+    # -- update path -------------------------------------------------------
     def run_batch(self, batch: TxnBatch
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
         if batch.size > (1 << 12):
             raise ValueError("composite uint32 keys require T <= 2^12")
-        self.store, read_vals, metrics = self._step(self.store, batch)
+        wm = jnp.asarray(self.watermark(), jnp.int32)
+        self.store, read_vals, metrics = self._step(self.store, batch, wm)
+        self._ts_next += batch.size
         return read_vals, metrics
 
     def run_stream(self, batches) -> Dict[str, jax.Array]:
@@ -56,16 +90,115 @@ class BohmEngine:
         metrics = None
         for batch in batches:
             # no block_until_ready: dispatch and move on
-            self.store, _, metrics = self._step(self.store, batch)
+            _, metrics = self.run_batch(batch)
         jax.block_until_ready(self.store.base)
         return metrics
 
     def snapshot(self) -> jax.Array:
         return self.store.base
 
+    def reset_store(self, base: jax.Array,
+                    base_ts: Optional[jax.Array] = None) -> None:
+        """Reinitialise committed state (head cache + ring) from ``base``."""
+        self.store = store_from_base(base, base_ts, self.ring_slots)
+        self._ts_next = 1
+        self._snapshots.clear()
 
-def _bohm_step(store: Store, batch: TxnBatch, *, workload: Workload,
-               mesh, cc_axis: str):
+    # -- snapshot-read path (zero CC bookkeeping) --------------------------
+    def current_ts(self) -> int:
+        """Snapshot timestamp that sees exactly the committed transactions:
+        the last assigned global ts. (A version is visible at ts when
+        begin <= ts < end, so pinning the NEXT unassigned ts would leak the
+        following batch's first transaction into the snapshot.)"""
+        return self._ts_next - 1
+
+    def watermark(self) -> int:
+        """Low watermark: min active reader snapshot ts. With no readers it
+        is the next unassigned ts — no future reader can pin below it, so
+        everything superseded up to now is reclaimable (the seed's
+        Condition-3 barrier GC as the degenerate case)."""
+        return min([s.ts for s in self._snapshots.values()]
+                   + [self._ts_next])
+
+    def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
+        """Register a reader at ``ts`` (default: now, i.e. a snapshot of
+        all committed transactions). Versions visible at or after the
+        lowest registered ts survive every subsequent batch barrier until
+        the reader is released."""
+        handle = SnapshotHandle(self._next_sid,
+                                self.current_ts() if ts is None
+                                else int(ts))
+        self._next_sid += 1
+        self._snapshots[handle.sid] = handle
+        return handle
+
+    def release_snapshot(self, handle: SnapshotHandle) -> None:
+        self._snapshots.pop(handle.sid, None)
+
+    def snapshot_windows(self, records) -> Tuple[jax.Array, jax.Array,
+                                                 jax.Array]:
+        """Gathered (begin, end, payload) candidate windows per record —
+        the ``mvcc_resolve`` kernel's input layout."""
+        return self._gather(self.store.versions,
+                            jnp.asarray(records, jnp.int32))
+
+    def snapshot_read(self, records, ts: Optional[int] = None
+                      ) -> Tuple[jax.Array, jax.Array]:
+        """Resolve ``records`` [B] at snapshot ``ts`` through the Pallas
+        kernel. Returns (vals [B, D], found [B]); found=False means the
+        visible version was never written or fell off the K-ring."""
+        if isinstance(ts, SnapshotHandle):
+            ts = ts.ts
+        if ts is None:
+            ts = self.current_ts()
+        records = jnp.asarray(records, jnp.int32)
+        begin, end, payload = self.snapshot_windows(records)
+        ts_vec = jnp.full((records.shape[0],), int(ts), jnp.int32)
+        return ops.mvcc_resolve(begin, end, payload, ts_vec,
+                                interpret=self.resolve_interpret)
+
+    def run_readonly_batch(self, batch: TxnBatch,
+                           ts: Optional[int] = None
+                           ) -> Tuple[jax.Array, jax.Array,
+                                      Dict[str, jax.Array]]:
+        """Execute a batch of read-only transactions against the snapshot
+        at ``ts``: no CC phase, no placeholder versions, no writes to any
+        shared state — reads resolve purely through the version ring in
+        ONE jitted step (this is the hot scan path; ``snapshot_read`` is
+        the flexible per-call variant).
+        Returns (read_vals [T, Rd, D], found [T, Rd], metrics)."""
+        if isinstance(ts, SnapshotHandle):
+            ts = ts.ts
+        if ts is None:
+            ts = self.current_ts()
+        return self._readonly(self.store.versions, batch.read_set,
+                              jnp.asarray(int(ts), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _readonly_resolve(ring, read_set: jax.Array, ts: jax.Array, *,
+                      interpret: Optional[bool]):
+    """One fused device step for a read-only batch: gather candidate
+    windows, resolve visibility through the Pallas kernel, mask pads."""
+    T, Rd = read_set.shape
+    flat = jnp.maximum(read_set.reshape(-1), 0)
+    begin, end, payload = gather_windows(ring, flat)
+    ts_vec = jnp.full((flat.shape[0],), ts, jnp.int32)
+    vals, found = ops.mvcc_resolve(begin, end, payload, ts_vec,
+                                   interpret=interpret)
+    valid = read_set >= 0
+    vals = jnp.where(valid[..., None], vals.reshape(T, Rd, -1), 0)
+    found = jnp.where(valid, found.reshape(T, Rd), True)
+    occ = ring_occupancy(ring)
+    n_valid = jnp.maximum(jnp.sum(valid), 1)
+    metrics = {"found_frac": jnp.sum(found & valid) / n_valid,
+               "ring_occ_max": jnp.max(occ)}
+    return vals, found, metrics
+
+
+def _bohm_step(store: Store, batch: TxnBatch,
+               watermark: Optional[jax.Array] = None, *,
+               workload: Workload, mesh, cc_axis: str):
     # --- CC phase: timestamps + placeholder versions + read annotations ---
     if mesh is not None and cc_axis in mesh.shape and \
             mesh.shape[cc_axis] > 1:
@@ -77,8 +210,9 @@ def _bohm_step(store: Store, batch: TxnBatch, *, workload: Workload,
     # --- batch barrier (the only synchronisation point) -------------------
     # --- execution phase: dependency wavefront ----------------------------
     w_data, read_vals, metrics = execute_plan(plan, batch, store, workload)
-    # --- Condition-3 GC / commit ------------------------------------------
-    new_store = commit(plan, batch, store, w_data)
+    # --- watermark-driven GC / commit (conditions 1+2, versions.py) -------
+    new_store, ring_metrics = commit(plan, batch, store, w_data, watermark)
+    metrics = dict(metrics, **ring_metrics)
     return new_store, read_vals, metrics
 
 
@@ -107,3 +241,12 @@ def serial_oracle(store_base: jax.Array, batch: TxnBatch,
         step, store_base,
         (batch.read_set, batch.write_set, batch.txn_type, batch.args))
     return final, reads
+
+
+def serial_oracle_prefix(store_base: jax.Array, batch: TxnBatch,
+                         workload: Workload, n_txns: int) -> jax.Array:
+    """Oracle state after only the first ``n_txns`` of ``batch`` — the
+    ground truth for a snapshot read at ts = ts_base + n_txns."""
+    prefix = jax.tree.map(lambda x: x[:n_txns], batch)
+    final, _ = serial_oracle(store_base, prefix, workload)
+    return final

@@ -48,9 +48,12 @@ class Plan:
     w_slot: jax.Array       # [T, W] slot of txn's writes in the sorted array
     r_dep_txn: jax.Array    # [T, Rd] local producer txn of each read (-1=base)
     r_dep_slot: jax.Array   # [T, Rd] version slot for each read (-1 = base)
-    # commit info (Condition-3 GC: only batch-final versions survive)
-    commit_mask: jax.Array  # [Nw] bool: version visible after the batch
+    # commit info: batch-final versions become the new single-version heads
+    commit_mask: jax.Array  # [Nw] bool: head version after the batch
     ts_base: jax.Array      # [] global timestamp of txn 0
+    # global version lifetimes — consumed by the persistent version ring
+    w_begin_ts: jax.Array   # [Nw] global begin ts (INF_TS for pads)
+    w_end_ts: jax.Array     # [Nw] global end ts (INF_TS = open past batch)
 
 
 def _keys(rec: jax.Array, t: jax.Array, T: int) -> jax.Array:
@@ -71,8 +74,11 @@ def cc_plan(batch: TxnBatch, ts_base: jax.Array) -> Plan:
     keys = jnp.where(valid, _keys(jnp.maximum(flat_rec, 0), flat_t, T),
                      jnp.uint32(0xFFFFFFFF))
 
-    order = jnp.argsort(keys)                                 # stable not req:
-    w_key = keys[order]                                       # keys unique
+    # stable: a txn whose write-set names the same record twice produces
+    # duplicate (record, ts) keys — program order (write column) must break
+    # the tie so the later write supersedes the earlier one.
+    order = jnp.argsort(keys, stable=True)
+    w_key = keys[order]
     w_rec = jnp.where(valid, flat_rec, jnp.int32(INF_TS))[order]
     w_txn = jnp.where(valid[order], flat_t[order], -1)
     w_valid = valid[order]
@@ -102,11 +108,15 @@ def cc_plan(batch: TxnBatch, ts_base: jax.Array) -> Plan:
     r_dep_slot = jnp.where(hit, pos, -1)
     r_dep_txn = jnp.where(hit, w_txn[jnp.maximum(pos, 0)], -1)
 
+    ts_base = jnp.asarray(ts_base, jnp.int32)
+    w_begin_ts = jnp.where(w_valid, ts_base + w_txn, INF_TS)
+    w_end_ts = jnp.where(w_valid & (w_end_local < T),
+                         ts_base + w_end_local, INF_TS)
     return Plan(w_rec=w_rec, w_txn=w_txn, w_end_local=w_end_local,
                 w_valid=w_valid, w_key=w_key, w_slot=w_slot,
                 r_dep_txn=r_dep_txn, r_dep_slot=r_dep_slot,
-                commit_mask=commit_mask, ts_base=jnp.asarray(ts_base,
-                                                             jnp.int32))
+                commit_mask=commit_mask, ts_base=ts_base,
+                w_begin_ts=w_begin_ts, w_end_ts=w_end_ts)
 
 
 # ---------------------------------------------------------------------------
@@ -131,20 +141,30 @@ def cc_plan_sharded(batch: TxnBatch, ts_base: jax.Array, mesh,
         return jax.tree.map(lambda x: x[None], p)   # add shard axis
 
     from jax.sharding import PartitionSpec as P
-    fn = jax.shard_map(
+    fn = _shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P()),
-        out_specs=jax.tree.map(lambda _: P(axis), _plan_structure()),
-        check_vma=False)
+        out_specs=jax.tree.map(lambda _: P(axis), _plan_structure()))
     return fn(batch.read_set, batch.write_set, batch.txn_type, batch.args,
               jnp.asarray(ts_base, jnp.int32))
+
+
+def _shard_map(fn, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (kwarg was renamed check_rep ->
+    check_vma when shard_map left jax.experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
 
 
 def _plan_structure():
     z = jnp.zeros((), jnp.int32)
     return Plan(w_rec=z, w_txn=z, w_end_local=z, w_valid=z, w_key=z,
                 w_slot=z, r_dep_txn=z, r_dep_slot=z, commit_mask=z,
-                ts_base=z)
+                ts_base=z, w_begin_ts=z, w_end_ts=z)
 
 
 def merge_sharded_plan(plan: Plan, batch: TxnBatch) -> Plan:
@@ -173,4 +193,6 @@ def merge_sharded_plan(plan: Plan, batch: TxnBatch) -> Plan:
         w_key=plan.w_key.reshape(-1),
         w_slot=w_slot, r_dep_txn=r_dep_txn, r_dep_slot=r_dep_slot,
         commit_mask=plan.commit_mask.reshape(-1),
-        ts_base=plan.ts_base.reshape(-1)[0])
+        ts_base=plan.ts_base.reshape(-1)[0],
+        w_begin_ts=plan.w_begin_ts.reshape(-1),
+        w_end_ts=plan.w_end_ts.reshape(-1))

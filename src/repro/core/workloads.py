@@ -65,6 +65,28 @@ def make_microbench() -> Workload:
     return make_ycsb(payload_words=2, ops=10)
 
 
+# --- Read-only snapshot scans (Figs 9/10 scenario) --------------------------
+# A scan transaction reads ``ops`` records and writes nothing; it is meant
+# for ``BohmEngine.run_readonly_batch``, which resolves every read against
+# the version ring at a pinned snapshot timestamp — no CC phase, no
+# placeholder versions, zero writes to shared state.
+def make_scan(ops: int = 10, payload_words: int = 2) -> Workload:
+    def scan(read_vals, args):
+        return read_vals, jnp.zeros((), bool)
+
+    return Workload(name="scan", n_read=ops, n_write=ops,
+                    payload_words=payload_words, branches=(scan,))
+
+
+def gen_scan_batch(rng: np.random.Generator, n_txns: int, n_records: int,
+                   ops: int = 10, theta: float = 0.0) -> TxnBatch:
+    recs = _sample_distinct(rng, n_txns, ops, n_records, theta)
+    write_set = np.full_like(recs, -1)
+    types = np.zeros(n_txns, np.int32)
+    args = np.zeros((n_txns, 1), np.int32)
+    return make_batch(recs, write_set, types, args)
+
+
 # --- SmallBank (§5.3) -------------------------------------------------------
 # Records: savings account of customer c -> record 2c; checking -> 2c + 1.
 # read_set / write_set width 3. Types:

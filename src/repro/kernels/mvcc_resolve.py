@@ -22,12 +22,19 @@ roofline is the data tile traffic.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 NEG_INF = jnp.iinfo(jnp.int32).min
+
+
+def default_interpret() -> bool:
+    """Pallas lowers this kernel natively only on TPU; every other backend
+    (the CPU substrate, notably) runs the kernel body in interpret mode."""
+    return jax.default_backend() != "tpu"
 
 
 def _resolve_kernel(ts_ref, begin_ref, end_ref, data_ref, out_ref,
@@ -52,7 +59,9 @@ def _resolve_kernel(ts_ref, begin_ref, end_ref, data_ref, out_ref,
                                              "interpret"))
 def mvcc_resolve(begin: jax.Array, end: jax.Array, data: jax.Array,
                  ts: jax.Array, *, block_b: int = 256, block_d: int = 128,
-                 interpret: bool = True):
+                 interpret: Optional[bool] = None):
+    if interpret is None:       # auto-select, overridable per call
+        interpret = default_interpret()
     b, k = begin.shape
     d = data.shape[-1]
     bb = min(block_b, b)

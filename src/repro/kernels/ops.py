@@ -7,21 +7,17 @@ against the jnp oracles in ref.py.
 """
 from __future__ import annotations
 
-import jax
-
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention as _decode
 from repro.kernels.flash_attention import \
     flash_attention_causal as _flash
+from repro.kernels.mvcc_resolve import default_interpret as _interpret
 from repro.kernels.mvcc_resolve import mvcc_resolve as _resolve
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
 def mvcc_resolve(begin, end, data, ts, **kw):
-    kw.setdefault("interpret", _interpret())
+    # interpret auto-selection (backend-driven, explicitly overridable)
+    # lives in the kernel itself — pass through untouched
     return _resolve(begin, end, data, ts, **kw)
 
 

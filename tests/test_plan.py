@@ -1,5 +1,11 @@
 """CC-phase unit tests: version ordering, end timestamps, read resolution,
-and equivalence of the record-partitioned (shard_map) planner."""
+duplicate write-set handling, and equivalence of the record-partitioned
+(shard_map) planner."""
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -56,6 +62,134 @@ def test_reader_never_sees_later_write():
     batch = make_batch(reads, writes, np.zeros(2), np.zeros((2, 1)))
     p = cc_plan(batch, jnp.int32(0))
     assert int(p.r_dep_txn[0, 0]) == -1      # reads the base version
+
+
+def test_duplicate_write_set_entries_stable_order():
+    """A txn whose write-set names the same record twice must keep program
+    order under the (record, ts) sort: ties on the composite key are broken
+    by write column (stable sort), so the LAST write is the segment-final
+    version and the earlier duplicate gets begin == end (never visible)."""
+    writes = np.array([[5, 5]])
+    reads = np.array([[5, 5]])
+    batch = make_batch(reads, writes, np.zeros(1), np.zeros((1, 1)))
+    p = cc_plan(batch, jnp.int32(7))
+    valid = np.asarray(p.w_valid)
+    assert valid.tolist() == [True, True]
+    # both versions carry ts 7; only the column-1 write commits
+    assert np.asarray(p.w_begin_ts)[valid].tolist() == [7, 7]
+    assert np.asarray(p.commit_mask).tolist() == [False, True]
+    # the earlier duplicate is closed at its own begin ts -> zero lifetime
+    assert np.asarray(p.w_end_ts)[0] == 7
+    # slots follow program order: write col 0 -> slot 0, col 1 -> slot 1
+    assert np.asarray(p.w_slot)[0].tolist() == [0, 1]
+    # the txn's own reads see the PREDECESSOR (base), not its duplicates
+    assert np.asarray(p.r_dep_txn).flatten().tolist() == [-1, -1]
+
+
+def test_duplicate_write_set_last_write_wins_end_to_end():
+    """Engine-level regression: with a duplicate write-set the later write
+    column must become the committed head AND the ring's visible version."""
+    from repro.core.engine import BohmEngine
+    from repro.core.txn import Workload
+
+    def two_writes(vals, args):
+        w = jnp.zeros_like(vals).at[0, 0].set(10).at[1, 0].set(20)
+        return w, jnp.zeros((), bool)
+
+    wl = Workload(name="dup", n_read=2, n_write=2, payload_words=1,
+                  branches=(two_writes,))
+    batch = make_batch(np.array([[5, 5]]), np.array([[5, 5]]),
+                       np.zeros(1), np.zeros((1, 1)))
+    eng = BohmEngine(8, wl)
+    eng.run_batch(batch)
+    assert int(eng.snapshot()[5, 0]) == 20
+    vals, found = eng.snapshot_read(np.array([5]))
+    assert bool(found[0]) and int(vals[0, 0]) == 20
+
+
+# ---------------------------------------------------------------------------
+# Record-partitioned CC equivalence. The in-process variant needs >1 device;
+# the property sweep runs in a subprocess that forces 4 host devices (the
+# repo convention — the main test process must keep seeing 1 device).
+# ---------------------------------------------------------------------------
+_SHARDED_PROPERTY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.engine import BohmEngine
+    from repro.core.plan import cc_plan, cc_plan_sharded, merge_sharded_plan
+    from repro.core.txn import Workload, make_batch
+
+    R, T, OPS = 32, 16, 3
+    mesh = jax.make_mesh((4,), ("cc",))
+
+    def rand_batch(seed):
+        rng = np.random.default_rng(seed)
+        reads = rng.integers(0, R, (T, OPS))
+        wmask = rng.random((T, OPS)) < 0.6
+        writes = np.where(wmask, reads, -1)
+        return make_batch(reads, writes, rng.integers(0, 2, T),
+                          rng.integers(1, 5, (T, 1)))
+
+    def version_rows(p):
+        v = np.asarray(p.w_valid).astype(bool)
+        rows = np.stack([np.asarray(p.w_rec)[v], np.asarray(p.w_txn)[v],
+                         np.asarray(p.w_end_local)[v],
+                         np.asarray(p.commit_mask)[v].astype(np.int32),
+                         np.asarray(p.w_begin_ts)[v],
+                         np.asarray(p.w_end_ts)[v]], axis=1)
+        return rows[np.lexsort(rows.T[::-1])]
+
+    def rmw(vals, args):
+        return vals.at[..., 0].add(args[0]), jnp.zeros((), bool)
+
+    def ro(vals, args):
+        return vals, jnp.zeros((), bool)
+
+    wl = Workload("inc", OPS, OPS, 2, (rmw, ro))
+    for seed in range(6):
+        batch = rand_batch(seed)
+        p1 = cc_plan(batch, jnp.int32(1))
+        ps = merge_sharded_plan(
+            cc_plan_sharded(batch, jnp.int32(1), mesh), batch)
+        # identical read resolution (producer txn per read)
+        np.testing.assert_array_equal(np.asarray(p1.r_dep_txn),
+                                      np.asarray(ps.r_dep_txn))
+        # identical write resolution: same (rec, txn, end, commit, ts) set
+        np.testing.assert_array_equal(version_rows(p1), version_rows(ps))
+
+    # end-to-end: sharded engine == unsharded engine, incl. snapshot ring
+    for seed in range(3):
+        e_u = BohmEngine(R, wl)
+        e_s = BohmEngine(R, wl, mesh=mesh)
+        for i in range(2):
+            batch = rand_batch(100 + seed * 10 + i)
+            r_u, _ = e_u.run_batch(batch)
+            r_s, _ = e_s.run_batch(batch)
+            np.testing.assert_array_equal(np.asarray(r_u),
+                                          np.asarray(r_s))
+        np.testing.assert_array_equal(np.asarray(e_u.snapshot()),
+                                      np.asarray(e_s.snapshot()))
+        v_u, f_u = e_u.snapshot_read(np.arange(R))
+        v_s, f_s = e_s.snapshot_read(np.arange(R))
+        np.testing.assert_array_equal(np.asarray(v_u), np.asarray(v_s))
+        np.testing.assert_array_equal(np.asarray(f_u), np.asarray(f_s))
+    print("SHARDED_PROPERTY_OK")
+""")
+
+
+def test_sharded_plan_property_sweep():
+    import os
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(root / "src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SHARDED_PROPERTY_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=str(root), timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_PROPERTY_OK" in out.stdout
 
 
 @pytest.mark.skipif(jax.device_count() < 2,

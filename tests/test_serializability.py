@@ -6,10 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.engine import BohmEngine, serial_oracle
-from repro.core.execute import Store, init_store
+from repro.core.execute import init_store
 from repro.core.baselines import run_2pl, run_occ, run_si
 from repro.core.txn import Workload, make_batch
 from repro.core.workloads import (gen_smallbank_batch, gen_ycsb_batch,
@@ -79,9 +81,7 @@ def test_bohm_ycsb_multi_batch(seed, theta):
 def test_bohm_smallbank(seed):
     wl = make_smallbank()
     eng = BohmEngine(64, wl)
-    eng.store = Store(base=jnp.full((64, 2), 100, jnp.int32),
-                      base_ts=eng.store.base_ts,
-                      ts_counter=eng.store.ts_counter)
+    eng.reset_store(jnp.full((64, 2), 100, jnp.int32))
     rng = np.random.default_rng(seed)
     base = jnp.full((64, 2), 100, jnp.int32)
     batch = gen_smallbank_batch(rng, 64, 32)
@@ -122,8 +122,7 @@ def test_write_skew_anomaly():
 
     # Bohm == serial
     eng = BohmEngine(2, wl)
-    eng.store = Store(base=base0, base_ts=eng.store.base_ts,
-                      ts_counter=eng.store.ts_counter)
+    eng.reset_store(base0)
     eng.run_batch(batch)
     assert eng.snapshot().tolist() == [[8], [13]]
 
