@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import csv
+import json
 import time
 from pathlib import Path
 from typing import Callable, Dict, List
@@ -28,6 +29,8 @@ def time_fn(fn: Callable, *args, warmup: int = 2, iters: int = 5,
 
 
 def write_csv(name: str, rows: List[Dict], print_rows: bool = True) -> Path:
+    """Write rows as CSV (and a JSON twin — the machine-readable artifact
+    CI uploads; see .github/workflows/ci.yml)."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.csv"
     if rows:
@@ -35,7 +38,16 @@ def write_csv(name: str, rows: List[Dict], print_rows: bool = True) -> Path:
             w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
             w.writeheader()
             w.writerows(rows)
+    write_json(name, rows)
     if print_rows:
         for r in rows:
             print(",".join(f"{k}={v}" for k, v in r.items()), flush=True)
+    return path
+
+
+def write_json(name: str, rows: List[Dict]) -> Path:
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.json"
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2, default=str)
     return path

@@ -7,6 +7,8 @@
   smallbank   Fig 8-10 full mix + read-only vs contention
   snapshot    Fig 9/10 scenario: update stream + pinned snapshot scans
               through the version ring (occupancy, GC, scan survival)
+  pipeline    §3/Fig 3 overlap: TxnService update stream at 1/2/4 store
+              shards, pipelined vs barriered (subprocess: 4 host devices)
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
 
@@ -48,6 +50,17 @@ def bench_snapshot():
     snapshot.run()
 
 
+def bench_pipeline(quick: bool = False):
+    # needs its own process: forces 4 host devices before jax init
+    root = Path(__file__).resolve().parents[1]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{root / 'src'}:{root}"
+    cmd = [sys.executable, str(Path(__file__).parent / "pipeline.py")]
+    if quick:
+        cmd.append("--quick")
+    subprocess.run(cmd, check=True, cwd=str(root), env=env)
+
+
 def bench_kernels():
     from benchmarks import kernels
     kernels.run()
@@ -64,7 +77,7 @@ def main() -> None:
                     help="skip the slow sweep dimensions")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
-                         "smallbank,snapshot,kernels,serving")
+                         "smallbank,snapshot,pipeline,kernels,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -83,6 +96,9 @@ def main() -> None:
     if want("snapshot"):
         print("== snapshot (Figs 9/10 scenario) ==", flush=True)
         bench_snapshot()
+    if want("pipeline"):
+        print("== pipeline (Fig 3 overlap) ==", flush=True)
+        bench_pipeline(args.quick)
     if want("kernels"):
         print("== kernels ==", flush=True)
         bench_kernels()

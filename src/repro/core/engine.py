@@ -4,15 +4,20 @@ One jitted call runs:   plan -> wavefront execute -> watermark commit.
 The CC phase can run record-partitioned over a mesh axis (``cc_shards``),
 reproducing the paper's intra-transaction parallelism; the execution phase
 is transaction-partitioned (the wavefront vector step IS the union of all
-execution threads' work for a wave).
+execution threads' work for a wave). The commit/GC step and the snapshot
+read path run against the record-partitioned version store
+(``repro.store.sharded``) — rings, watermark GC and ``mvcc_resolve``
+visibility all per shard, with ``n_shards == 1`` bit-identical to the
+plain single ring.
 
 The paper overlaps CC of batch b+1 with execution of batch b (two thread
-pools). Under JAX's async dispatch the same overlap falls out for free:
-``run_batch`` is non-blocking, so dispatching batch b+1's plan while batch
-b's execution is in flight pipelines on the device queue.
+pools). The phases are exposed separately (``plan_phase`` /
+``exec_commit_phase``) so the pipelined scheduler
+(``repro.service.TxnService``) can dispatch CC(b+1) while exec(b) is still
+in flight on the device queue; ``run_batch`` fuses both into one step.
 
 Snapshot reads (paper §4.1.3 / Figs 9-10): because the commit step retains
-versions in a cross-batch ring (see versions.py), read-only transactions
+versions in cross-batch rings (see repro/store/), read-only transactions
 can run against OLDER snapshots while update batches stream through —
 ``begin_snapshot`` pins a timestamp (holding the GC watermark down),
 ``snapshot_read`` / ``run_readonly_batch`` resolve visibility through the
@@ -24,7 +29,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,8 +39,8 @@ from repro.core.execute import (Store, commit, execute_plan, init_store,
                                 store_from_base)
 from repro.core.plan import Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
-from repro.core.versions import gather_windows, ring_occupancy
-from repro.kernels import ops
+from repro.store import (gather_windows_sharded, resolve_sharded,
+                         store_occupancy, to_global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +53,8 @@ class SnapshotHandle:
 class BohmEngine:
     def __init__(self, num_records: int, workload: Workload,
                  mesh=None, cc_axis: str = "cc", ring_slots: int = 4,
-                 resolve_interpret: Optional[bool] = None):
+                 resolve_interpret: Optional[bool] = None,
+                 n_shards: Optional[int] = None):
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
@@ -56,18 +62,30 @@ class BohmEngine:
         self.mesh = mesh
         self.cc_axis = cc_axis
         self.ring_slots = ring_slots
+        if n_shards is None:
+            n_shards = mesh.shape[cc_axis] if (
+                mesh is not None and cc_axis in mesh.shape) else 1
+        self.n_shards = int(n_shards)
         # None = auto-select from jax.default_backend() inside the kernel
         self.resolve_interpret = resolve_interpret
         self.store = init_store(num_records, workload.payload_words,
-                                ring_slots=ring_slots)
+                                ring_slots=ring_slots,
+                                n_shards=self.n_shards)
         self._ts_next = 1                  # host mirror of store.ts_counter
         self._snapshots: Dict[int, SnapshotHandle] = {}
         self._next_sid = 0
+        self._overflow = jnp.zeros_like(self.store.versions.rings.head)
         self._step = jax.jit(functools.partial(
             _bohm_step, workload=workload, mesh=mesh, cc_axis=cc_axis))
-        self._gather = jax.jit(gather_windows)
-        self._readonly = functools.partial(_readonly_resolve,
-                                           interpret=resolve_interpret)
+        self._plan = jax.jit(functools.partial(
+            plan_phase, mesh=mesh, cc_axis=cc_axis))
+        self._exec = jax.jit(functools.partial(
+            exec_commit_phase, workload=workload, mesh=mesh,
+            cc_axis=cc_axis))
+        self._gather = jax.jit(gather_windows_sharded)
+        self._readonly = jax.jit(functools.partial(
+            _readonly_resolve, mesh=mesh, cc_axis=cc_axis,
+            interpret=resolve_interpret))
 
     # -- update path -------------------------------------------------------
     def run_batch(self, batch: TxnBatch
@@ -77,6 +95,7 @@ class BohmEngine:
         wm = jnp.asarray(self.watermark(), jnp.int32)
         self.store, read_vals, metrics = self._step(self.store, batch, wm)
         self._ts_next += batch.size
+        self.record_commit_metrics(metrics)
         return read_vals, metrics
 
     def run_stream(self, batches) -> Dict[str, jax.Array]:
@@ -86,7 +105,11 @@ class BohmEngine:
         so while the device executes batch b's wavefront the host is
         already tracing/enqueuing b+1's plan; the only synchronisation is
         the data dependency on the committed store (the paper's batch
-        barrier). Returns the metrics of the final batch."""
+        barrier). Returns the metrics of the final batch.
+
+        ``repro.service.TxnService`` is the full scheduler built on this
+        overlap: admission queue, explicitly split plan/exec dispatch,
+        submit/poll tickets, snapshot-aware watermarks."""
         metrics = None
         for batch in batches:
             # no block_until_ready: dispatch and move on
@@ -99,10 +122,13 @@ class BohmEngine:
 
     def reset_store(self, base: jax.Array,
                     base_ts: Optional[jax.Array] = None) -> None:
-        """Reinitialise committed state (head cache + ring) from ``base``."""
-        self.store = store_from_base(base, base_ts, self.ring_slots)
+        """Reinitialise committed state (head cache + rings) from
+        ``base``."""
+        self.store = store_from_base(base, base_ts, self.ring_slots,
+                                     self.n_shards)
         self._ts_next = 1
         self._snapshots.clear()
+        self._overflow = jnp.zeros_like(self.store.versions.rings.head)
 
     # -- snapshot-read path (zero CC bookkeeping) --------------------------
     def current_ts(self) -> int:
@@ -138,24 +164,26 @@ class BohmEngine:
     def snapshot_windows(self, records) -> Tuple[jax.Array, jax.Array,
                                                  jax.Array]:
         """Gathered (begin, end, payload) candidate windows per record —
-        the ``mvcc_resolve`` kernel's input layout."""
+        the ``mvcc_resolve`` kernel's input layout, gathered from each
+        record's owning shard."""
         return self._gather(self.store.versions,
                             jnp.asarray(records, jnp.int32))
 
     def snapshot_read(self, records, ts: Optional[int] = None
                       ) -> Tuple[jax.Array, jax.Array]:
         """Resolve ``records`` [B] at snapshot ``ts`` through the Pallas
-        kernel. Returns (vals [B, D], found [B]); found=False means the
-        visible version was never written or fell off the K-ring."""
+        kernel, per shard. Returns (vals [B, D], found [B]); found=False
+        means the visible version was never written or fell off the
+        K-ring."""
         if isinstance(ts, SnapshotHandle):
             ts = ts.ts
         if ts is None:
             ts = self.current_ts()
         records = jnp.asarray(records, jnp.int32)
-        begin, end, payload = self.snapshot_windows(records)
         ts_vec = jnp.full((records.shape[0],), int(ts), jnp.int32)
-        return ops.mvcc_resolve(begin, end, payload, ts_vec,
-                                interpret=self.resolve_interpret)
+        return resolve_sharded(self.store.versions, records, ts_vec,
+                               mesh=self.mesh, axis=self.cc_axis,
+                               interpret=self.resolve_interpret)
 
     def run_readonly_batch(self, batch: TxnBatch,
                            ts: Optional[int] = None
@@ -163,9 +191,9 @@ class BohmEngine:
                                       Dict[str, jax.Array]]:
         """Execute a batch of read-only transactions against the snapshot
         at ``ts``: no CC phase, no placeholder versions, no writes to any
-        shared state — reads resolve purely through the version ring in
-        ONE jitted step (this is the hot scan path; ``snapshot_read`` is
-        the flexible per-call variant).
+        shared state — reads resolve purely through the sharded version
+        rings in ONE jitted step (this is the hot scan path;
+        ``snapshot_read`` is the flexible per-call variant).
         Returns (read_vals [T, Rd, D], found [T, Rd], metrics)."""
         if isinstance(ts, SnapshotHandle):
             ts = ts.ts
@@ -174,46 +202,108 @@ class BohmEngine:
         return self._readonly(self.store.versions, batch.read_set,
                               jnp.asarray(int(ts), jnp.int32))
 
+    # -- K-ring pressure diagnostics ---------------------------------------
+    def record_commit_metrics(self, metrics: Dict[str, jax.Array]) -> None:
+        """Accumulate per-record ring pressure from a commit's metrics
+        (called by run_batch and by TxnService for pipelined commits)."""
+        self._overflow = self._overflow + metrics["ring_overwrote_rec"]
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _readonly_resolve(ring, read_set: jax.Array, ts: jax.Array, *,
-                      interpret: Optional[bool]):
-    """One fused device step for a read-only batch: gather candidate
-    windows, resolve visibility through the Pallas kernel, mask pads."""
-    T, Rd = read_set.shape
-    flat = jnp.maximum(read_set.reshape(-1), 0)
-    begin, end, payload = gather_windows(ring, flat)
-    ts_vec = jnp.full((flat.shape[0],), ts, jnp.int32)
-    vals, found = ops.mvcc_resolve(begin, end, payload, ts_vec,
-                                   interpret=interpret)
-    valid = read_set >= 0
-    vals = jnp.where(valid[..., None], vals.reshape(T, Rd, -1), 0)
-    found = jnp.where(valid, found.reshape(T, Rd), True)
-    occ = ring_occupancy(ring)
-    n_valid = jnp.maximum(jnp.sum(valid), 1)
-    metrics = {"found_frac": jnp.sum(found & valid) / n_valid,
-               "ring_occ_max": jnp.max(occ)}
-    return vals, found, metrics
+    def overflow_by_record(self) -> jax.Array:
+        """[R] cumulative count of live-version overwrites per record —
+        how often each key's snapshot history was truncated by K-ring
+        overflow since the last reset."""
+        return to_global(self.store.versions, self._overflow)
+
+    def overflow_stats(self, top_k: int = 8) -> Dict[str, object]:
+        """Host-side K-ring pressure summary: total overwrites, the top-k
+        hottest records, and a histogram of per-record overwrite counts
+        (powers-of-two buckets). Diagnostic API — synchronises."""
+        counts = self.overflow_by_record()
+        k = min(top_k, self.num_records)
+        top_vals, top_recs = jax.lax.top_k(counts, k)
+        edges = [0, 1, 2, 4, 8, 16, 32, 64]
+        hist = _bucket_histogram(counts, edges)
+        return {
+            "total_overwrites": int(jnp.sum(counts)),
+            "records_affected": int(jnp.sum(counts > 0)),
+            "top_records": [(int(r), int(v))
+                            for r, v in zip(top_recs, top_vals) if v > 0],
+            "histogram": hist,
+        }
+
+
+def _bucket_histogram(counts: jax.Array, edges: List[int]
+                      ) -> List[Tuple[str, int]]:
+    """[(bucket label, n_records)] for counts bucketed by [lo, hi)."""
+    out = []
+    for i, lo in enumerate(edges):
+        hi = edges[i + 1] if i + 1 < len(edges) else None
+        if hi is None:
+            n = int(jnp.sum(counts >= lo))
+            label = f"{lo}+"
+        else:
+            n = int(jnp.sum((counts >= lo) & (counts < hi)))
+            label = f"{lo}" if hi == lo + 1 else f"{lo}-{hi - 1}"
+        out.append((label, n))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The two phases, exposed separately so a scheduler can overlap them across
+# batches (CC of b+1 has NO data dependency on exec of b: it needs only the
+# batch content and the host-mirrored timestamp base).
+# ---------------------------------------------------------------------------
+def plan_phase(batch: TxnBatch, ts_base: jax.Array, *, mesh,
+               cc_axis: str) -> Plan:
+    """CC phase: timestamps + placeholder versions + read annotations,
+    record-partitioned over the mesh when one is present."""
+    if mesh is not None and cc_axis in mesh.shape and \
+            mesh.shape[cc_axis] > 1:
+        sharded = plan_mod.cc_plan_sharded(batch, ts_base, mesh, cc_axis)
+        return plan_mod.merge_sharded_plan(sharded, batch)
+    return cc_plan(batch, ts_base)
+
+
+def exec_commit_phase(plan: Plan, batch: TxnBatch, store: Store,
+                      watermark: Optional[jax.Array] = None, *,
+                      workload: Workload, mesh, cc_axis: str):
+    """Execution wavefront + watermark-driven sharded commit (the batch
+    barrier is the data dependency on ``store``)."""
+    w_data, read_vals, metrics = execute_plan(plan, batch, store, workload)
+    new_store, ring_metrics = commit(plan, batch, store, w_data, watermark,
+                                     mesh=mesh, cc_axis=cc_axis)
+    metrics = dict(metrics, **ring_metrics)
+    return new_store, read_vals, metrics
 
 
 def _bohm_step(store: Store, batch: TxnBatch,
                watermark: Optional[jax.Array] = None, *,
                workload: Workload, mesh, cc_axis: str):
     # --- CC phase: timestamps + placeholder versions + read annotations ---
-    if mesh is not None and cc_axis in mesh.shape and \
-            mesh.shape[cc_axis] > 1:
-        sharded = plan_mod.cc_plan_sharded(batch, store.ts_counter, mesh,
-                                           cc_axis)
-        plan = plan_mod.merge_sharded_plan(sharded, batch)
-    else:
-        plan = cc_plan(batch, store.ts_counter)
+    plan = plan_phase(batch, store.ts_counter, mesh=mesh, cc_axis=cc_axis)
     # --- batch barrier (the only synchronisation point) -------------------
-    # --- execution phase: dependency wavefront ----------------------------
-    w_data, read_vals, metrics = execute_plan(plan, batch, store, workload)
-    # --- watermark-driven GC / commit (conditions 1+2, versions.py) -------
-    new_store, ring_metrics = commit(plan, batch, store, w_data, watermark)
-    metrics = dict(metrics, **ring_metrics)
-    return new_store, read_vals, metrics
+    # --- execution phase + watermark-driven GC / commit -------------------
+    return exec_commit_phase(plan, batch, store, watermark,
+                             workload=workload, mesh=mesh, cc_axis=cc_axis)
+
+
+def _readonly_resolve(versions, read_set: jax.Array, ts: jax.Array, *,
+                      mesh, cc_axis: str, interpret: Optional[bool]):
+    """One fused device step for a read-only batch: per-shard gather of
+    candidate windows, visibility through the Pallas kernel, pad mask."""
+    T, Rd = read_set.shape
+    flat = jnp.maximum(read_set.reshape(-1), 0)
+    ts_vec = jnp.full((flat.shape[0],), ts, jnp.int32)
+    vals, found = resolve_sharded(versions, flat, ts_vec, mesh=mesh,
+                                  axis=cc_axis, interpret=interpret)
+    valid = read_set >= 0
+    vals = jnp.where(valid[..., None], vals.reshape(T, Rd, -1), 0)
+    found = jnp.where(valid, found.reshape(T, Rd), True)
+    occ = store_occupancy(versions)
+    n_valid = jnp.maximum(jnp.sum(valid), 1)
+    metrics = {"found_frac": jnp.sum(found & valid) / n_valid,
+               "ring_occ_max": jnp.max(occ)}
+    return vals, found, metrics
 
 
 # ---------------------------------------------------------------------------

@@ -24,48 +24,52 @@ import jax.numpy as jnp
 
 from repro.core.plan import Plan
 from repro.core.txn import TxnBatch, Workload
-from repro.core.versions import VersionRing, commit_versions, init_ring
+from repro.store import (ShardedVersionStore, commit_sharded,
+                         init_sharded_store)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Store:
-    """Committed state: single-version heads + the persistent version ring.
+    """Committed state: single-version heads + the persistent version store.
 
     ``base`` caches each record's head (open) version — the common-case
     read target of the execution wavefront, kept dense so in-batch reads
     stay a single [R, D] gather. ``versions`` is the multiversion source of
-    truth: a per-record ring of (begin_ts, end_ts, payload) that persists
+    truth: per-record rings of (begin_ts, end_ts, payload) that persist
     across batch barriers so snapshot readers at older timestamps can
-    resolve visibility long after the head has moved on. Reclamation is
-    watermark-driven (GC conditions 1+2, see versions.py), not tied to the
-    barrier.
+    resolve visibility long after the head has moved on, record-partitioned
+    over the ``cc`` mesh axis (``repro.store.sharded``; n_shards == 1 is
+    the plain single ring). Reclamation is watermark-driven (GC conditions
+    1+2, see repro/store/ring.py), not tied to the barrier.
     """
     base: jax.Array       # [R, D] head-version payloads
     base_ts: jax.Array    # [R] begin ts of the head version
-    ts_counter: jax.Array  # [] next timestamp to assign
-    versions: VersionRing  # [R, K] cross-batch version ring
+    ts_counter: jax.Array        # [] next timestamp to assign
+    versions: ShardedVersionStore  # [n, Rl, K] cross-batch version rings
 
 
 def init_store(num_records: int, payload_words: int,
-               init_value: int = 0, ring_slots: int = 4) -> Store:
+               init_value: int = 0, ring_slots: int = 4,
+               n_shards: int = 1) -> Store:
     base = jnp.full((num_records, payload_words), init_value, jnp.int32)
     base_ts = jnp.zeros((num_records,), jnp.int32)
     return Store(
         base=base, base_ts=base_ts,
         ts_counter=jnp.ones((), jnp.int32),
-        versions=init_ring(base, base_ts, ring_slots))
+        versions=init_sharded_store(base, base_ts, ring_slots, n_shards))
 
 
 def store_from_base(base: jax.Array, base_ts: Optional[jax.Array] = None,
-                    ring_slots: int = 4) -> Store:
+                    ring_slots: int = 4, n_shards: int = 1) -> Store:
     """Store whose initial state (head + ring slot 0) is ``base``."""
     base = jnp.asarray(base, jnp.int32)
     if base_ts is None:
         base_ts = jnp.zeros((base.shape[0],), jnp.int32)
     return Store(base=base, base_ts=base_ts,
                  ts_counter=jnp.ones((), jnp.int32),
-                 versions=init_ring(base, base_ts, ring_slots))
+                 versions=init_sharded_store(base, base_ts, ring_slots,
+                                             n_shards))
 
 
 def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
@@ -126,15 +130,15 @@ def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
 
 
 def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
-           watermark: Optional[jax.Array] = None
-           ) -> Tuple[Store, Dict[str, jax.Array]]:
+           watermark: Optional[jax.Array] = None, mesh=None,
+           cc_axis: str = "cc") -> Tuple[Store, Dict[str, jax.Array]]:
     """Batch barrier: fold each record's batch-final version into the head
-    cache AND commit every batch version into the persistent ring, where
-    eviction is governed by the low watermark (min active reader snapshot
-    ts). With no active readers the watermark defaults to the pre-batch
-    timestamp counter, so superseded versions die one barrier after they
-    are closed — the seed's Condition-3 behaviour falls out as the
-    degenerate no-reader case.
+    cache AND commit every batch version into the persistent (sharded)
+    rings, where eviction is governed by the low watermark (min active
+    reader snapshot ts). With no active readers the watermark defaults to
+    the pre-batch timestamp counter, so superseded versions die one
+    barrier after they are closed — the seed's Condition-3 behaviour falls
+    out as the degenerate no-reader case.
     """
     if watermark is None:
         watermark = store.ts_counter
@@ -148,10 +152,11 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     base_ts = jnp.concatenate([store.base_ts, jnp.zeros((1,), jnp.int32)])
     base_ts = base_ts.at[rec].set(jnp.where(plan.commit_mask, ts, 0),
                                   mode="drop")[:-1]
-    ring, ring_metrics = commit_versions(
+    versions, ring_metrics = commit_sharded(
         store.versions, plan.w_rec, plan.w_key, plan.w_valid,
-        plan.w_begin_ts, plan.w_end_ts, w_data, watermark)
+        plan.w_begin_ts, plan.w_end_ts, w_data, watermark,
+        mesh=mesh, axis=cc_axis)
     T = batch.read_set.shape[0]
     return Store(base=base, base_ts=base_ts,
                  ts_counter=store.ts_counter + T,
-                 versions=ring), ring_metrics
+                 versions=versions), ring_metrics

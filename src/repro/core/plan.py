@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.txn import TxnBatch
+from repro.store.sharded import shard_map_compat as _shard_map
 
 INF_TS = jnp.iinfo(jnp.int32).max
 
@@ -149,15 +150,8 @@ def cc_plan_sharded(batch: TxnBatch, ts_base: jax.Array, mesh,
               jnp.asarray(ts_base, jnp.int32))
 
 
-def _shard_map(fn, *, mesh, in_specs, out_specs):
-    """jax.shard_map across jax versions (kwarg was renamed check_rep ->
-    check_vma when shard_map left jax.experimental)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(fn, mesh=mesh, in_specs=in_specs,
-                     out_specs=out_specs, check_rep=False)
+# (the jax-version shard_map compat shim lives in repro.store.sharded —
+# the storage layer is the single home; imported as _shard_map above)
 
 
 def _plan_structure():

@@ -1,172 +1,12 @@
-"""Persistent multi-version store: per-record version rings + precise GC.
+"""Compatibility shim — the version-ring subsystem moved to ``repro.store``.
 
-The seed engine implemented only Condition 3 of the paper's GC rules
-(§4.2.2): every version superseded within a batch died at the batch
-barrier, leaving a single-version store and making snapshot reads at older
-timestamps impossible. This module is the multiversion substance of the
-paper: a fixed-K per-record version ring that PERSISTS across batches,
-
-    begin   [R, K] i32   version begin timestamp (INF_TS = empty slot)
-    end     [R, K] i32   version end timestamp   (INF_TS = still open)
-    payload [R, K, D]    version payloads
-    head    [R]    i32   next ring position (insert cursor, mod K)
-
-with reclamation driven by a **low watermark** = min(active reader
-snapshot ts, next unassigned ts). GC conditions 1+2: a version may be
-reclaimed exactly when its end timestamp is <= the watermark — some
-transaction wrote a newer version (end is closed) AND no active or future
-reader can have a snapshot timestamp inside [begin, end). Versions above
-the watermark survive the barrier, which is what lets read-only
-transactions run against older snapshots while update batches stream
-through (the paper's Fig 9/10 scenario; see also Ben-David et al.'s
-precise-GC formulation in PAPERS.md).
-
-Slots are NOT kept sorted — the ``mvcc_resolve`` Pallas kernel resolves
-visibility by a K-wide interval test + max-begin reduction, which is
-order-independent, so insertion is pure ring arithmetic: the j-th new
-version of record r in a batch lands in slot (head[r] + j) % K.
-
-Overflow policy (K-bounded): when a record accumulates more than K live
-versions, the ring keeps the NEWEST K and the oldest are overwritten even
-if they sit above the watermark. A snapshot read whose visible version was
-overwritten reports found=False — never a stale payload: every version
-older than the overwritten one has end <= the overwritten version's begin
-<= the reader's ts, so the interval test rejects it. Smarter policies
-(spill, per-record K) are ROADMAP follow-ups; ``overwrote_live`` in the
-commit metrics quantifies the pressure.
+The single-ring primitives live in ``repro.store.ring``; the
+record-partitioned store (rings sharded over the ``cc`` mesh axis) is
+``repro.store.sharded.ShardedVersionStore``. This module re-exports the
+single-ring API so existing imports keep working.
 """
-from __future__ import annotations
+from repro.store.ring import (INF_TS, VersionRing, commit_versions,
+                              gather_windows, init_ring, ring_occupancy)
 
-import dataclasses
-from typing import Dict, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-
-INF_TS = jnp.iinfo(jnp.int32).max
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class VersionRing:
-    begin: jax.Array     # [R, K] i32
-    end: jax.Array       # [R, K] i32
-    payload: jax.Array   # [R, K, D]
-    head: jax.Array      # [R] i32
-
-    @property
-    def num_slots(self) -> int:
-        return self.begin.shape[1]
-
-    @property
-    def num_records(self) -> int:
-        return self.begin.shape[0]
-
-
-def init_ring(base: jax.Array, base_ts: jax.Array,
-              num_slots: int = 4) -> VersionRing:
-    """Ring whose slot 0 holds the initial open version of every record."""
-    R, D = base.shape
-    begin = jnp.full((R, num_slots), INF_TS, jnp.int32)
-    begin = begin.at[:, 0].set(jnp.asarray(base_ts, jnp.int32))
-    end = jnp.full((R, num_slots), INF_TS, jnp.int32)
-    payload = jnp.zeros((R, num_slots, D), base.dtype)
-    payload = payload.at[:, 0, :].set(base)
-    head = jnp.full((R,), 1 % num_slots, jnp.int32)
-    return VersionRing(begin=begin, end=end, payload=payload, head=head)
-
-
-def ring_occupancy(ring: VersionRing) -> jax.Array:
-    """[R] live (non-garbage) version count per record."""
-    return jnp.sum(ring.begin != INF_TS, axis=1).astype(jnp.int32)
-
-
-def gather_windows(ring: VersionRing, records: jax.Array
-                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Pre-gather per-read candidate windows for ``mvcc_resolve``:
-    records [B] -> (begin [B, K], end [B, K], payload [B, K, D])."""
-    rec = jnp.maximum(jnp.asarray(records, jnp.int32), 0)
-    return ring.begin[rec], ring.end[rec], ring.payload[rec]
-
-
-def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
-                    w_valid: jax.Array, w_begin_ts: jax.Array,
-                    w_end_ts: jax.Array, w_data: jax.Array,
-                    watermark: jax.Array
-                    ) -> Tuple[VersionRing, Dict[str, jax.Array]]:
-    """Batch-barrier ring maintenance: GC conditions 1+2, then commit ALL
-    of the batch's versions (not just segment-final ones).
-
-      1. reclaim every version with end <= watermark (no active or future
-         reader can see it) — precise GC, versions above the mark survive;
-      2. close the previously-open head version of each written record
-         (its end becomes the record's first in-batch begin timestamp);
-      3. insert the batch's versions at (head + rank) % K, keeping the
-         newest K per record when a segment overflows the ring.
-
-    Inputs are the plan's sorted placeholder arrays ([Nw], pads invalid)
-    plus the produced payloads ``w_data`` [Nw, D]. ``w_key`` need only be
-    sorted *within* contiguous shard blocks (as ``merge_sharded_plan``
-    emits) — a stable re-sort here restores the global record order.
-    """
-    R, K = ring.begin.shape
-    watermark = jnp.asarray(watermark, jnp.int32)
-
-    # -- 1. precise reclamation below the watermark ------------------------
-    live = ring.begin != INF_TS
-    dead = live & (ring.end <= watermark)          # open versions: end==INF
-    evicted = jnp.sum(dead)
-    begin = jnp.where(dead, INF_TS, ring.begin)
-    end = jnp.where(dead, INF_TS, ring.end)
-
-    # -- 2. close the open head version of every written record ------------
-    first_ts = jnp.full((R,), INF_TS, jnp.int32).at[
-        jnp.where(w_valid, w_rec, R)].min(
-        jnp.where(w_valid, w_begin_ts, INF_TS), mode="drop")
-    open_slot = (end == INF_TS) & (begin != INF_TS)
-    end = jnp.where(open_slot & (first_ts != INF_TS)[:, None],
-                    first_ts[:, None], end)
-
-    # -- 3. insert the batch's versions (newest K per record) --------------
-    order = jnp.argsort(w_key, stable=True)        # record-major, pads last
-    rec_s = w_rec[order]
-    valid_s = w_valid[order]
-    beg_s = w_begin_ts[order]
-    end_s = w_end_ts[order]
-    data_s = w_data[order]
-
-    left = jnp.searchsorted(rec_s, rec_s, side="left")
-    right = jnp.searchsorted(rec_s, rec_s, side="right")
-    count = (right - left).astype(jnp.int32)
-    rank = jnp.arange(rec_s.shape[0], dtype=jnp.int32) - left.astype(
-        jnp.int32)
-    drop_n = jnp.maximum(count - K, 0)             # overflow: drop oldest
-    keep = valid_s & (rank >= drop_n)
-    safe_rec = jnp.clip(rec_s, 0, R - 1)
-    slot = (ring.head[safe_rec] + rank - drop_n) % K
-    flat = jnp.where(keep, safe_rec * K + slot, R * K)   # OOB => dropped
-
-    tgt_begin = begin.reshape(-1)[jnp.minimum(flat, R * K - 1)]
-    tgt_end = end.reshape(-1)[jnp.minimum(flat, R * K - 1)]
-    overwrote_live = jnp.sum(keep & (tgt_begin != INF_TS)
-                             & (tgt_end > watermark))
-
-    begin = begin.reshape(-1).at[flat].set(beg_s, mode="drop").reshape(R, K)
-    end = end.reshape(-1).at[flat].set(end_s, mode="drop").reshape(R, K)
-    payload = ring.payload.reshape(R * K, -1).at[flat].set(
-        data_s, mode="drop").reshape(ring.payload.shape)
-
-    inserted = jnp.zeros((R,), jnp.int32).at[
-        jnp.where(w_valid, w_rec, R)].add(1, mode="drop")
-    head = (ring.head + jnp.minimum(inserted, K)) % K
-
-    new_ring = VersionRing(begin=begin, end=end, payload=payload, head=head)
-    occ = ring_occupancy(new_ring)
-    metrics = {
-        "ring_evicted": evicted,
-        "ring_overflow_dropped": jnp.sum(valid_s & ~keep),
-        "ring_overwrote_live": overwrote_live,
-        "ring_occ_max": jnp.max(occ),
-        "ring_occ_mean": jnp.mean(occ.astype(jnp.float32)),
-    }
-    return new_ring, metrics
+__all__ = ["INF_TS", "VersionRing", "commit_versions", "gather_windows",
+           "init_ring", "ring_occupancy"]

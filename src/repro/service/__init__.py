@@ -1,0 +1,10 @@
+"""repro.service — pipelined transaction serving on top of the engine.
+
+``TxnService`` keeps >= 2 batches in flight: CC(b+1) is dispatched while
+exec(b) runs (the paper's two-thread-pool overlap, Fig. 3), with an
+admission queue, submit/poll/wait tickets, snapshot-aware watermarks, and
+a barriered fallback mode for A/B measurement (benchmarks/pipeline.py).
+"""
+from repro.service.txn_service import BatchResult, TxnService
+
+__all__ = ["BatchResult", "TxnService"]

@@ -1,0 +1,232 @@
+"""TxnService: the pipelined batch scheduler on top of ``BohmEngine``.
+
+The paper runs two thread pools so the CC phase of batch b+1 overlaps the
+execution of batch b (§3, Fig. 3). The substrate equivalent: the engine's
+two phases are separate jitted dispatches, and the CC phase has NO data
+dependency on the committed store — it needs only the batch content and
+the host-mirrored timestamp base. ``TxnService`` exploits that:
+
+  admission queue  ``submit`` enqueues a batch and returns a ticket;
+  CC runs ahead    plans for up to ``max_inflight`` admitted batches are
+                   dispatched immediately — while exec(b) is still in
+                   flight on the device queue, CC(b+1) is already being
+                   traced/enqueued (double-buffered plan state riding
+                   JAX async dispatch);
+  exec in order    each planned batch's exec+commit step is dispatched
+                   non-blocking; the store data dependency IS the paper's
+                   batch barrier, enforced by the device queue rather than
+                   a host join;
+  backpressure     at most ``max_inflight`` exec steps may be unrealised;
+                   beyond that the oldest is joined before admitting more
+                   (bounds device-queue memory);
+  snapshots        ``begin_snapshot`` between two submits pins the
+                   watermark exactly as it would between two sequential
+                   ``run_batch`` calls — plan-time timestamp mirroring
+                   keeps the pipelined watermark identical to the
+                   barriered one, so the final store state is
+                   byte-identical pipelined or not (property-tested).
+
+``pipelined=False`` degrades to the barriered schedule (host joins every
+batch) — the baseline the pipeline benchmark compares against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import BohmEngine, SnapshotHandle
+from repro.core.txn import TxnBatch
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchResult:
+    """Realised (or in-flight) outputs of one submitted batch."""
+    ticket: int
+    read_vals: jax.Array            # [T, Rd, D]
+    metrics: Dict[str, jax.Array]
+
+
+@dataclasses.dataclass
+class _Planned:
+    ticket: int
+    batch: TxnBatch
+    plan: object                    # Plan (device futures)
+    ts_base: int
+    watermark: int
+
+
+class TxnService:
+    def __init__(self, engine: BohmEngine, max_inflight: int = 2,
+                 pipelined: bool = True):
+        if max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
+        self.engine = engine
+        self.max_inflight = max_inflight
+        self.pipelined = pipelined
+        self._next_ticket = 0
+        self._admission: Deque[Tuple[int, TxnBatch]] = deque()
+        self._planned: Deque[_Planned] = deque()
+        self._inflight: Deque[int] = deque()     # exec dispatched, unjoined
+        self._results: Dict[int, BatchResult] = {}
+        self.stats = {"submitted": 0, "planned_ahead_max": 0,
+                      "backpressure_joins": 0}
+
+    # -- client API --------------------------------------------------------
+    def submit(self, batch: TxnBatch) -> int:
+        """Admit one update batch; returns a ticket for ``poll``/``wait``.
+        Dispatch is non-blocking: by the time this returns, the batch's CC
+        plan (and usually its exec) is on the device queue."""
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        self._admission.append((ticket, batch))
+        self.stats["submitted"] += 1
+        self._pump()
+        return ticket
+
+    def submit_many(self, batches: Iterable[TxnBatch]) -> List[int]:
+        """Admit a burst: everything is enqueued before the pump runs, so
+        the CC plan window fills to ``max_inflight`` ahead of the first
+        exec join."""
+        tickets = []
+        for batch in batches:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._admission.append((ticket, batch))
+            self.stats["submitted"] += 1
+            tickets.append(ticket)
+        self._pump()
+        return tickets
+
+    def poll(self, ticket: int) -> Optional[BatchResult]:
+        """Non-blocking: the result if that batch's outputs are realised
+        on device, else None (still in flight). A result is handed out
+        ONCE — retrieval consumes the ticket, so a long-running stream
+        does not accumulate every historical batch's read values."""
+        self._pump()
+        res = self._results.get(ticket)
+        if res is None:
+            return None
+        if not _is_ready(res.read_vals):
+            return None
+        self._note_joined(ticket)
+        del self._results[ticket]
+        return res
+
+    def wait(self, ticket: int) -> BatchResult:
+        """Block until the batch's outputs are realised. Like ``poll``,
+        retrieval consumes the ticket."""
+        self._pump()
+        res = self._results.pop(ticket)
+        jax.block_until_ready(res.read_vals)
+        self._note_joined(ticket)
+        return res
+
+    def drain(self) -> None:
+        """Join everything in flight (the host-side batch barrier) and
+        discard unretrieved results — a ticket must be waited/polled
+        BEFORE the drain if its read values are wanted."""
+        self._pump()
+        jax.block_until_ready(self.engine.store.base)
+        self._inflight.clear()
+        self._results.clear()
+
+    # -- snapshot API (delegates to the engine; correctness notes) ---------
+    def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
+        """Pin a reader snapshot. Called between two submits this pins the
+        timestamp after every batch submitted so far — identical to
+        pinning between two sequential ``run_batch`` calls, because the
+        engine's timestamp mirror advances at PLAN dispatch and commits
+        land in ticket order ahead of any read that could observe them."""
+        return self.engine.begin_snapshot(ts)
+
+    def release_snapshot(self, handle: SnapshotHandle) -> None:
+        self.engine.release_snapshot(handle)
+
+    def run_readonly_batch(self, batch: TxnBatch,
+                           ts: Optional[int] = None):
+        """Read-only batch against the (possibly still in-flight) store:
+        the resolve step's data dependency on the ring arrays orders it
+        after every dispatched commit, so a pinned mid-pipeline snapshot
+        reads exactly the state it pinned."""
+        return self.engine.run_readonly_batch(batch, ts)
+
+    # -- pump: plan ahead, exec in order, bound the queue ------------------
+    def _pump(self) -> None:
+        """Interleaved dispatch: keep the plan window full, then exec the
+        oldest planned batch — so after exec(b) is enqueued, CC(b+1) (and
+        up to ``max_inflight`` plans total) is already on the queue before
+        exec(b+1). Everything here is non-blocking dispatch except the
+        explicit barriered mode and backpressure joins."""
+        while True:
+            progressed = self._fill_plan_window()
+            if self._planned:
+                self._exec_oldest()
+                progressed = True
+            # backpressure INSIDE the dispatch loop: a burst of submits
+            # never enqueues more than max_inflight unrealised exec steps
+            self._apply_backpressure()
+            if not progressed:
+                break
+
+    def _apply_backpressure(self) -> None:
+        """Bound the unrealised exec queue by joining the oldest."""
+        while len(self._inflight) > self.max_inflight:
+            oldest = self._inflight.popleft()
+            res = self._results.get(oldest)
+            if res is not None:
+                jax.block_until_ready(res.read_vals)
+                self.stats["backpressure_joins"] += 1
+
+    def _fill_plan_window(self) -> bool:
+        """CC phase runs ahead: dispatch plans for admitted batches while
+        earlier exec steps are still in flight on the device queue."""
+        eng = self.engine
+        progressed = False
+        while self._admission and len(self._planned) < self.max_inflight:
+            ticket, batch = self._admission.popleft()
+            if batch.size > (1 << 12):
+                raise ValueError("composite uint32 keys require T <= 2^12")
+            ts_base = eng._ts_next
+            # the watermark the sequential schedule would use for this
+            # batch, captured at plan time (eng._ts_next == this batch's
+            # ts base here) so pipelining cannot over-reclaim —
+            # byte-identical GC to the barriered schedule
+            wm = eng.watermark()
+            plan = eng._plan(batch, jnp.asarray(ts_base, jnp.int32))
+            eng._ts_next += batch.size
+            self._planned.append(_Planned(ticket, batch, plan, ts_base, wm))
+            self.stats["planned_ahead_max"] = max(
+                self.stats["planned_ahead_max"], len(self._planned))
+            progressed = True
+        return progressed
+
+    def _exec_oldest(self) -> None:
+        """Execution in ticket order: each step consumes the previous
+        step's store (the batch barrier as a device data dependency)."""
+        eng = self.engine
+        p = self._planned.popleft()
+        store, read_vals, metrics = eng._exec(
+            p.plan, p.batch, eng.store,
+            jnp.asarray(p.watermark, jnp.int32))
+        eng.store = store
+        eng.record_commit_metrics(metrics)
+        self._results[p.ticket] = BatchResult(p.ticket, read_vals, metrics)
+        self._inflight.append(p.ticket)
+        if not self.pipelined:
+            jax.block_until_ready(store.base)
+            self._inflight.clear()
+
+    def _note_joined(self, ticket: int) -> None:
+        try:
+            self._inflight.remove(ticket)
+        except ValueError:
+            pass
+
+
+def _is_ready(x: jax.Array) -> bool:
+    is_ready = getattr(x, "is_ready", None)
+    return bool(is_ready()) if is_ready is not None else True

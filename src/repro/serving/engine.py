@@ -6,6 +6,16 @@ before a step is dispatched — the jitted functions contain zero
 coordination logic, mirroring Bohm's execution threads which "proceed
 without any concern for other concurrently executing transactions".
 
+Request state lives in a Bohm MVCC record store (``repro.core.engine`` on
+the sharded version rings of ``repro.store``): every serving step commits
+one update batch of per-request progress records, and point lookups
+(``lookup`` — request status queries) are BATCHED through
+``BohmEngine.run_readonly_batch`` — one jitted snapshot-read step
+resolving every lookup against the sharded ring via the ``mvcc_resolve``
+kernel, with zero bookkeeping writes. Because the store is multiversion,
+a monitor can pin a snapshot and read a CONSISTENT progress view while
+decode steps keep committing (paper Figs 9/10, applied to serving).
+
 Supports the dense GQA decoder family (smollm / mistral / qwen / nemotron /
 llava backbones). Attention over the paged cache uses the logical gather
 view on this CPU substrate; on TPU the block-table-indirect Pallas decode
@@ -21,17 +31,35 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import BohmEngine, SnapshotHandle
+from repro.core.txn import Workload, make_batch
 from repro.models import attention as attn_mod
 from repro.models import ffn as ffn_mod
 from repro.models.layers import apply_rope, rms_norm
 from repro.serving import pages as pages_mod
 from repro.serving.scheduler import BohmScheduler, Request, StepPlan
 
+# request-state record payload: [seq_len, n_generated, last_token+1, status]
+STATE_WORDS = 4
+STATE_UNKNOWN, STATE_ACTIVE, STATE_DONE = 0, 1, 2
+
+
+def make_state_workload() -> Workload:
+    """One-branch workload for the request-state store: a blind put of the
+    4-word progress row (reads nothing — writes never wait on reads)."""
+    def put(vals, args):
+        return args[None, :], jnp.zeros((), bool)
+
+    return Workload(name="serve_state", n_read=1, n_write=1,
+                    payload_words=STATE_WORDS, branches=(put,))
+
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, slots: int = 8,
                  page_size: int = 16, num_pages: int = 512,
-                 max_pages_per_seq: int = 64, temperature: float = 0.0):
+                 max_pages_per_seq: int = 64, temperature: float = 0.0,
+                 kv_dtype=jnp.bfloat16, max_rids: int = 1024,
+                 state_shards: int = 2):
         assert cfg.attention == "full" and not cfg.enc_dec and not cfg.hybrid
         self.cfg = cfg
         self.params = params
@@ -41,7 +69,14 @@ class ServeEngine:
                                    max_pages_per_seq=max_pages_per_seq)
         self.kv = pages_mod.init_paged_kv(
             cfg.num_layers, num_pages, page_size, slots, max_pages_per_seq,
-            cfg.num_kv_heads, cfg.head_dim, jnp.bfloat16)
+            cfg.num_kv_heads, cfg.head_dim, kv_dtype)
+        # MVCC request-state store: one progress record per rid, committed
+        # through the full CC->exec->commit pipeline each serving step and
+        # read back via batched snapshot reads over the sharded ring.
+        self.max_rids = max_rids
+        self.state = BohmEngine(max_rids, make_state_workload(),
+                                ring_slots=4, n_shards=state_shards)
+        self._state_dirty: Dict[int, List[int]] = {}
         self._decode = jax.jit(functools.partial(_paged_decode_step, cfg=cfg))
         self._prefill = jax.jit(functools.partial(_paged_prefill, cfg=cfg),
                                 static_argnames=("prompt_len",))
@@ -51,9 +86,69 @@ class ServeEngine:
 
     # ------------------------------------------------------------------
     def submit(self, rid: int, prompt: np.ndarray, max_new_tokens: int):
+        if not 0 <= rid < self.max_rids:
+            raise ValueError(f"rid must be in [0, {self.max_rids})")
         self.sched.submit(Request(rid=rid, prompt=np.asarray(prompt,
                                                              np.int32),
                                   max_new_tokens=max_new_tokens))
+
+    # -- request-state store -------------------------------------------
+    def _mark_state(self, req: Request, status: int) -> None:
+        last = req.generated[-1] + 1 if req.generated else 0
+        self._state_dirty[req.rid] = [
+            len(req.prompt) + len(req.generated), len(req.generated),
+            last, status]
+
+    def _flush_state(self) -> None:
+        """Commit this step's progress rows as fixed-shape update batches
+        (pads for idle slots keep the jitted step monomorphic; more than
+        one batch only if rows somehow exceed the slot count)."""
+        if not self._state_dirty:
+            return
+        S = self.sched.slots
+        rows = sorted(self._state_dirty.items())
+        self._state_dirty.clear()
+        for lo in range(0, len(rows), S):
+            chunk = rows[lo:lo + S]
+            writes = np.full((S, 1), -1, np.int64)
+            args = np.zeros((S, STATE_WORDS), np.int64)
+            for i, (rid, row) in enumerate(chunk):
+                writes[i, 0] = rid
+                args[i] = row
+            batch = make_batch(np.full((S, 1), -1), writes, np.zeros(S),
+                               args)
+            self.state.run_batch(batch)
+
+    def lookup(self, rids, ts: Optional[SnapshotHandle] = None
+               ) -> Dict[str, np.ndarray]:
+        """Batched point lookups of request progress, resolved in one
+        ``run_readonly_batch`` snapshot-read step against the sharded
+        version ring (zero bookkeeping writes). ``ts`` may be a pinned
+        ``SnapshotHandle`` for a consistent historical view while decode
+        steps keep committing. Returns arrays keyed by field."""
+        rids = np.asarray(rids, np.int64).reshape(-1)
+        if len(rids) and (rids.min() < 0 or rids.max() >= self.max_rids):
+            raise ValueError(f"rids must be in [0, {self.max_rids})")
+        batch = make_batch(rids[:, None], np.full((len(rids), 1), -1),
+                           np.zeros(len(rids)),
+                           np.zeros((len(rids), STATE_WORDS)))
+        vals, found, _ = self.state.run_readonly_batch(batch, ts)
+        rows = np.asarray(vals)[:, 0]                 # [N, STATE_WORDS]
+        return {
+            "rid": np.asarray(rids),
+            "seq_len": rows[:, 0],
+            "n_generated": rows[:, 1],
+            "last_token": rows[:, 2] - 1,             # -1 = none yet
+            "status": rows[:, 3],
+            "known": np.asarray(found)[:, 0] & (rows[:, 3] != STATE_UNKNOWN),
+        }
+
+    def begin_state_snapshot(self) -> SnapshotHandle:
+        """Pin a consistent progress snapshot (holds state-store GC)."""
+        return self.state.begin_snapshot()
+
+    def release_state_snapshot(self, handle: SnapshotHandle) -> None:
+        self.state.release_snapshot(handle)
 
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Continuous batching loop until all submitted requests finish."""
@@ -84,6 +179,7 @@ class ServeEngine:
                 tok = int(jnp.argmax(logits[-1]))
                 next_tok[req.slot] = tok
                 req.generated.append(tok)
+                self._mark_state(req, STATE_ACTIVE)
                 # page tables changed on host; sync the device copy
                 self.kv = self.kv.__class__(
                     pages=self.kv.pages,
@@ -114,6 +210,10 @@ class ServeEngine:
                 if len(req.generated) >= req.max_new_tokens:
                     self.sched.complete(s)
                     next_tok.pop(s, None)
+                    self._mark_state(req, STATE_DONE)
+                else:
+                    self._mark_state(req, STATE_ACTIVE)
+            self._flush_state()
             self.sched.end_batch()
         return self.sched.finished
 

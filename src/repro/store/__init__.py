@@ -1,0 +1,24 @@
+"""repro.store — the persistent multiversion storage layer.
+
+``ring``     single-shard per-record version rings (begin/end/payload
+             slots), watermark GC, the ``commit_versions`` barrier step.
+``sharded``  ``ShardedVersionStore``: the ring record-partitioned over the
+             ``cc`` mesh axis — commit, GC and ``mvcc_resolve`` snapshot
+             reads run per shard with no global store materialisation.
+
+The engine (``repro.core``) sits on top of this package; the serving KV
+path reaches it through ``BohmEngine.run_readonly_batch``.
+"""
+from repro.store.ring import (INF_TS, VersionRing, commit_versions,
+                              gather_windows, init_ring, ring_occupancy)
+from repro.store.sharded import (ShardedVersionStore, commit_sharded,
+                                 gather_windows_sharded, global_record_ids,
+                                 init_sharded_store, resolve_sharded,
+                                 store_occupancy, to_global, unshard)
+
+__all__ = [
+    "INF_TS", "VersionRing", "commit_versions", "gather_windows",
+    "init_ring", "ring_occupancy", "ShardedVersionStore", "commit_sharded",
+    "gather_windows_sharded", "global_record_ids", "init_sharded_store",
+    "resolve_sharded", "store_occupancy", "to_global", "unshard",
+]

@@ -1,0 +1,317 @@
+"""Record-partitioned version store: the ring sharded over the ``cc`` axis.
+
+``ShardedVersionStore`` partitions the persistent version ring by record
+hash — global record ``r`` is owned by shard ``r % n`` at local index
+``r // n``, the same ownership rule as the record-partitioned CC planner
+(``cc_plan_sharded``) — so commit, watermark GC and snapshot resolution
+all run per shard without ever materialising a global [R, K] store:
+
+  * ``commit_sharded``  each shard masks the batch's placeholder arrays to
+    the records it owns and runs the single-ring ``commit_versions`` on
+    its local ring — zero cross-shard communication (commit order inside
+    a record segment is a per-record property, and every record has
+    exactly one owner);
+  * ``resolve_sharded``  each shard gathers candidate windows for the
+    reads it owns and resolves visibility through the ``mvcc_resolve``
+    Pallas kernel; per-read results merge by ownership (each read has
+    exactly one owner, others contribute zeros);
+  * GC is watermark-driven per shard — the watermark is a global scalar,
+    so reclamation decisions are embarrassingly parallel.
+
+Two mapping substrates share one per-shard body:
+
+  * ``mesh`` given (a ``cc`` axis with n devices): ``shard_map`` — each
+    device holds one shard's ring arrays and commits/resolves locally;
+  * no mesh: logical shards on one device (vmap for commit, an unrolled
+    loop of kernel calls for resolve) — the layout and arithmetic are
+    identical, so sharded state is bit-equal across substrates.
+
+``n_shards == 1`` short-circuits to the plain single-ring code paths on
+the squeezed arrays — bit-identical to the unsharded store.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.store.ring import (INF_TS, VersionRing, commit_versions,
+                              gather_windows, ring_occupancy)
+
+PAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedVersionStore:
+    """Version rings stacked over a leading shard axis.
+
+    ``rings`` arrays carry shapes [n, R_local, ...] where
+    ``R_local = ceil(num_records / n)``; records past ``num_records``
+    (hash-padding) hold empty rings and are never read or written.
+    """
+    rings: VersionRing       # stacked: begin/end [n, Rl, K], head [n, Rl]
+    num_records: int         # global record count (static)
+
+    @property
+    def n_shards(self) -> int:
+        return self.rings.begin.shape[0]
+
+    @property
+    def records_per_shard(self) -> int:
+        return self.rings.begin.shape[1]
+
+    @property
+    def num_slots(self) -> int:
+        return self.rings.begin.shape[2]
+
+
+jax.tree_util.register_dataclass(
+    ShardedVersionStore, data_fields=("rings",), meta_fields=("num_records",))
+
+
+def _ring0(store: ShardedVersionStore) -> VersionRing:
+    """The squeezed single ring of an n_shards == 1 store."""
+    return jax.tree.map(lambda x: x[0], store.rings)
+
+
+def _take_shard(store: ShardedVersionStore, s: int) -> VersionRing:
+    return jax.tree.map(lambda x: x[s], store.rings)
+
+
+def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
+                       num_slots: int = 4,
+                       n_shards: int = 1) -> ShardedVersionStore:
+    """Store whose slot 0 holds the initial open version of every record,
+    hash-partitioned into ``n_shards`` rings."""
+    R, D = base.shape
+    if base_ts is None:
+        base_ts = jnp.zeros((R,), jnp.int32)
+    n = int(n_shards)
+    Rl = -(-R // n)
+    pad = Rl * n - R
+    basep = jnp.pad(jnp.asarray(base), ((0, pad), (0, 0)))
+    tsp = jnp.pad(jnp.asarray(base_ts, jnp.int32), (0, pad))
+    # global record r = local * n + shard lives at [shard, local]
+    base_sh = basep.reshape(Rl, n, D).transpose(1, 0, 2)
+    ts_sh = tsp.reshape(Rl, n).T
+    real = global_record_ids(n, Rl) < R                       # [n, Rl]
+    begin = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
+    begin = begin.at[:, :, 0].set(jnp.where(real, ts_sh, INF_TS))
+    end = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
+    payload = jnp.zeros((n, Rl, num_slots, D), basep.dtype)
+    payload = payload.at[:, :, 0, :].set(
+        jnp.where(real[..., None], base_sh, 0))
+    head = jnp.full((n, Rl), 1 % num_slots, jnp.int32)
+    return ShardedVersionStore(
+        rings=VersionRing(begin=begin, end=end, payload=payload, head=head),
+        num_records=R)
+
+
+def global_record_ids(n_shards: int, records_per_shard: int) -> jax.Array:
+    """[n, Rl] global record id at each sharded position."""
+    local = jnp.arange(records_per_shard, dtype=jnp.int32)[None, :]
+    shard = jnp.arange(n_shards, dtype=jnp.int32)[:, None]
+    return local * n_shards + shard
+
+
+def unshard(store: ShardedVersionStore) -> VersionRing:
+    """Materialise the global [R, K] ring. Tests/debug only — no hot path
+    calls this (the whole point of the sharded store)."""
+    n, Rl = store.n_shards, store.records_per_shard
+    R = store.num_records
+
+    def merge(x):
+        return jnp.moveaxis(x, 0, 1).reshape((Rl * n,) + x.shape[2:])[:R]
+
+    return jax.tree.map(merge, store.rings)
+
+
+def to_global(store: ShardedVersionStore, per_shard: jax.Array) -> jax.Array:
+    """Re-index a per-shard [n, Rl] record statistic to global [R]."""
+    n, Rl = store.n_shards, store.records_per_shard
+    return jnp.moveaxis(per_shard, 0, 1).reshape(
+        (Rl * n,) + per_shard.shape[2:])[:store.num_records]
+
+
+def store_occupancy(store: ShardedVersionStore) -> jax.Array:
+    """[R] live version count per global record."""
+    return to_global(store, ring_occupancy(store.rings))
+
+
+# ---------------------------------------------------------------------------
+# Commit: per-shard ring maintenance (GC + insert), no communication.
+# ---------------------------------------------------------------------------
+def _mask_to_shard(n: int, shard, w_rec, w_key, w_valid):
+    """Project global placeholder arrays onto one shard: foreign records
+    become pads (key UINT32_MAX sorts last, valid=False drops the write),
+    owned records map to their shard-local index. The global (rec, ts) key
+    order is preserved within a shard — rec -> rec // n is monotone over
+    the records a shard owns — so the key needs no recomputation."""
+    owned = w_valid & ((w_rec % n) == shard)
+    rec_l = jnp.where(owned, w_rec // n, jnp.int32(INF_TS))
+    key_l = jnp.where(owned, w_key, PAD_KEY)
+    return rec_l, key_l, owned
+
+
+def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
+                   w_key: jax.Array, w_valid: jax.Array,
+                   w_begin_ts: jax.Array, w_end_ts: jax.Array,
+                   w_data: jax.Array, watermark: jax.Array,
+                   mesh=None, axis: str = "cc"
+                   ) -> Tuple[ShardedVersionStore, Dict[str, jax.Array]]:
+    """Commit ALL batch versions into the partitioned rings.
+
+    Inputs are the merged plan's global placeholder arrays (identical on
+    every shard); each shard commits only the records it owns. Metrics are
+    aggregated to match the single-ring ``commit_versions`` contract,
+    except ``ring_overwrote_rec`` which stays per-shard [n, Rl] (use
+    ``to_global`` for the [R] view).
+    """
+    n = store.n_shards
+    if n == 1:
+        ring, metrics = commit_versions(_ring0(store), w_rec, w_key,
+                                        w_valid, w_begin_ts, w_end_ts,
+                                        w_data, watermark)
+        metrics["ring_overwrote_rec"] = metrics["ring_overwrote_rec"][None]
+        return dataclasses.replace(
+            store, rings=jax.tree.map(lambda x: x[None], ring)), metrics
+
+    def one_shard(ring_s: VersionRing, shard):
+        rec_l, key_l, owned = _mask_to_shard(n, shard, w_rec, w_key,
+                                             w_valid)
+        return commit_versions(ring_s, rec_l, key_l, owned, w_begin_ts,
+                               w_end_ts, w_data, watermark)
+
+    if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
+        from jax.sharding import PartitionSpec as P
+
+        def body(begin, end, payload, head):
+            ring_s = VersionRing(begin=begin[0], end=end[0],
+                                 payload=payload[0], head=head[0])
+            ring_o, m = one_shard(ring_s, jax.lax.axis_index(axis))
+            return jax.tree.map(lambda x: x[None], (ring_o, m))
+
+        rings, per = _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis), P(axis), P(axis), P(axis)),
+            out_specs=jax.tree.map(lambda _: P(axis), (
+                _ring_struct(), _metrics_struct())))(
+            store.rings.begin, store.rings.end, store.rings.payload,
+            store.rings.head)
+    else:
+        rings, per = jax.vmap(one_shard)(
+            store.rings, jnp.arange(n, dtype=jnp.int32))
+
+    R = store.num_records
+    metrics = {
+        "ring_evicted": jnp.sum(per["ring_evicted"]),
+        "ring_overflow_dropped": jnp.sum(per["ring_overflow_dropped"]),
+        "ring_overwrote_live": jnp.sum(per["ring_overwrote_live"]),
+        "ring_overwrote_rec": per["ring_overwrote_rec"],        # [n, Rl]
+        "ring_occ_max": jnp.max(per["ring_occ_max"]),
+        # per-shard means weight hash-padding records with 0 occupancy;
+        # renormalise to the real record count
+        "ring_occ_mean": jnp.sum(per["ring_occ_mean"])
+        * store.records_per_shard / R,
+    }
+    return dataclasses.replace(store, rings=rings), metrics
+
+
+def _ring_struct():
+    z = jnp.zeros((), jnp.int32)
+    return VersionRing(begin=z, end=z, payload=z, head=z)
+
+
+def _metrics_struct():
+    z = jnp.zeros((), jnp.int32)
+    return {"ring_evicted": z, "ring_overflow_dropped": z,
+            "ring_overwrote_live": z, "ring_overwrote_rec": z,
+            "ring_occ_max": z, "ring_occ_mean": z}
+
+
+# ---------------------------------------------------------------------------
+# Snapshot reads: per-shard gather + mvcc_resolve, merged by ownership.
+# ---------------------------------------------------------------------------
+def gather_windows_sharded(store: ShardedVersionStore, records: jax.Array
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """(begin [B, K], end [B, K], payload [B, K, D]) candidate windows per
+    read, gathered from each record's owning shard."""
+    if store.n_shards == 1:
+        return gather_windows(_ring0(store), records)
+    n = store.n_shards
+    rec = jnp.maximum(jnp.asarray(records, jnp.int32), 0)
+    shard, loc = rec % n, rec // n
+    r = store.rings
+    return r.begin[shard, loc], r.end[shard, loc], r.payload[shard, loc]
+
+
+def resolve_sharded(store: ShardedVersionStore, records: jax.Array,
+                    ts: jax.Array, mesh=None, axis: str = "cc",
+                    interpret: Optional[bool] = None
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """Resolve ``records`` [B] at snapshot timestamps ``ts`` [B] through
+    the Pallas kernel, PER SHARD: each shard runs ``mvcc_resolve`` over
+    the reads it owns against its local ring; per-read results merge by
+    ownership (foreign shards contribute zeros / found=False). Returns
+    (vals [B, D], found [B])."""
+    n = store.n_shards
+    records = jnp.asarray(records, jnp.int32)
+    if n == 1:
+        begin, end, payload = gather_windows(_ring0(store), records)
+        return ops.mvcc_resolve(begin, end, payload, ts,
+                                interpret=interpret)
+
+    def one_shard(ring_s: VersionRing, shard):
+        owned = (records % n) == shard
+        local = jnp.where(owned, records // n, 0)
+        begin, end, payload = gather_windows(ring_s, local)
+        vals, found = ops.mvcc_resolve(begin, end, payload, ts,
+                                       interpret=interpret)
+        return jnp.where(owned[:, None], vals, 0), owned & found
+
+    if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
+        from jax.sharding import PartitionSpec as P
+
+        def body(begin, end, payload, head):
+            ring_s = VersionRing(begin=begin[0], end=end[0],
+                                 payload=payload[0], head=head[0])
+            vals, found = one_shard(ring_s, jax.lax.axis_index(axis))
+            # each read is owned by exactly one shard: sum == select
+            return (jax.lax.psum(vals, axis),
+                    jax.lax.psum(found.astype(jnp.int32), axis) > 0)
+
+        return _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(axis),) * 4,
+            out_specs=(P(), P()))(
+            store.rings.begin, store.rings.end, store.rings.payload,
+            store.rings.head)
+
+    # logical shards on one device: unrolled kernel calls (n is static),
+    # merged by ownership — XLA schedules the independent shard resolves
+    # side by side.
+    vals = None
+    found = None
+    for s in range(n):
+        v_s, f_s = one_shard(_take_shard(store, s), jnp.int32(s))
+        vals = v_s if vals is None else vals + v_s
+        found = f_s if found is None else found | f_s
+    return vals, found
+
+
+def shard_map_compat(fn, *, mesh, in_specs, out_specs):
+    """jax.shard_map across jax versions (kwarg was renamed check_rep ->
+    check_vma when shard_map left jax.experimental). The single home of
+    this shim — the CC planner (repro.core.plan) imports it too."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=out_specs, check_rep=False)
+
+
+_shard_map = shard_map_compat

@@ -17,7 +17,7 @@ from repro.core.engine import (BohmEngine, serial_oracle,
                                serial_oracle_prefix)
 from repro.core.execute import init_store
 from repro.core.txn import Workload, make_batch
-from repro.core.versions import INF_TS, ring_occupancy
+from repro.store import store_occupancy
 from repro.core.workloads import gen_scan_batch, make_scan
 from repro.kernels import ops, ref
 from repro.kernels.mvcc_resolve import default_interpret
@@ -133,7 +133,7 @@ def test_gc_retains_above_watermark_and_reclaims_after_release():
     _, m3 = eng.run_batch(_random_batch(6))
     assert int(m3["ring_evicted"]) > 0
     assert int(m3["ring_occ_max"]) <= int(max(occ_pinned))
-    occ = np.asarray(ring_occupancy(eng.store.versions))
+    occ = np.asarray(store_occupancy(eng.store.versions))
     assert occ.max() <= int(m3["ring_occ_max"])
 
 
