@@ -9,6 +9,8 @@
               through the version ring (occupancy, GC, scan survival)
   pipeline    §3/Fig 3 overlap: TxnService update stream at 1/2/4 store
               shards, pipelined vs barriered (subprocess: 4 host devices)
+  admission   conflict-aware admission: merged CC epochs + exec-exec
+              overlap vs the barriered baseline, hot/cold skewed streams
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
 
@@ -61,6 +63,11 @@ def bench_pipeline(quick: bool = False):
     subprocess.run(cmd, check=True, cwd=str(root), env=env)
 
 
+def bench_admission(quick: bool = False):
+    from benchmarks import admission
+    admission.run(quick)
+
+
 def bench_kernels():
     from benchmarks import kernels
     kernels.run()
@@ -77,7 +84,8 @@ def main() -> None:
                     help="skip the slow sweep dimensions")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
-                         "smallbank,snapshot,pipeline,kernels,serving")
+                         "smallbank,snapshot,pipeline,admission,kernels,"
+                         "serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -99,6 +107,9 @@ def main() -> None:
     if want("pipeline"):
         print("== pipeline (Fig 3 overlap) ==", flush=True)
         bench_pipeline(args.quick)
+    if want("admission"):
+        print("== admission (conflict-aware scheduler) ==", flush=True)
+        bench_admission(args.quick)
     if want("kernels"):
         print("== kernels ==", flush=True)
         bench_kernels()

@@ -11,10 +11,18 @@ visibility all per shard, with ``n_shards == 1`` bit-identical to the
 plain single ring.
 
 The paper overlaps CC of batch b+1 with execution of batch b (two thread
-pools). The phases are exposed separately (``plan_phase`` /
-``exec_commit_phase``) so the pipelined scheduler
-(``repro.service.TxnService``) can dispatch CC(b+1) while exec(b) is still
-in flight on the device queue; ``run_batch`` fuses both into one step.
+pools). The step is a first-class PHASE GRAPH: ``plan_phase`` (CC),
+``exec_phase`` (wavefront) and ``commit_phase`` (barrier + ring commit)
+are separate jits, and ``run_batch`` is a thin composition of the three.
+The conflict-aware scheduler (``repro.service.TxnService``) exploits the
+split three ways: CC(b+1) dispatches while exec(b) is in flight (no store
+dependency), exec(b+1) dispatches BEFORE commit(b) when the two batches'
+record footprints are disjoint (exec reads only ``store.base`` rows in
+its read-set, none of which the deferred commit writes), and several
+admitted batches with pairwise-disjoint footprints merge into one CC
+epoch (one plan + one wavefront + one commit over the concatenated
+batch). ``_bohm_step`` keeps the fully fused single-dispatch variant for
+benchmarks that time the monolithic step.
 
 Snapshot reads (paper §4.1.3 / Figs 9-10): because the commit step retains
 versions in cross-batch rings (see repro/store/), read-only transactions
@@ -37,10 +45,10 @@ import jax.numpy as jnp
 from repro.core import plan as plan_mod
 from repro.core.execute import (Store, commit, execute_plan, init_store,
                                 store_from_base)
-from repro.core.plan import Plan, cc_plan
+from repro.core.plan import MAX_BATCH_TXNS, Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
-from repro.store import (gather_windows_sharded, resolve_sharded,
-                         store_occupancy, to_global)
+from repro.store import (gather_windows_sharded, gc_sharded,
+                         resolve_sharded, store_occupancy, to_global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -80,8 +88,10 @@ class BohmEngine:
         self._plan = jax.jit(functools.partial(
             plan_phase, mesh=mesh, cc_axis=cc_axis))
         self._exec = jax.jit(functools.partial(
-            exec_commit_phase, workload=workload, mesh=mesh,
-            cc_axis=cc_axis))
+            exec_phase, workload=workload))
+        self._commit = jax.jit(functools.partial(
+            commit_phase, mesh=mesh, cc_axis=cc_axis))
+        self._gc = jax.jit(gc_sharded)
         self._gather = jax.jit(gather_windows_sharded)
         self._readonly = jax.jit(functools.partial(
             _readonly_resolve, mesh=mesh, cc_axis=cc_axis,
@@ -90,10 +100,19 @@ class BohmEngine:
     # -- update path -------------------------------------------------------
     def run_batch(self, batch: TxnBatch
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
-        if batch.size > (1 << 12):
+        """One batch through the phase graph: plan -> exec -> commit,
+        three jitted dispatches (the scheduler in ``repro.service`` calls
+        the same three jits with its own interleaving; ``_step`` is the
+        fused single-dispatch twin used by throughput benchmarks)."""
+        if batch.size > MAX_BATCH_TXNS:
             raise ValueError("composite uint32 keys require T <= 2^12")
         wm = jnp.asarray(self.watermark(), jnp.int32)
-        self.store, read_vals, metrics = self._step(self.store, batch, wm)
+        plan = self._plan(batch, self.store.ts_counter)
+        w_data, read_vals, exec_metrics = self._exec(plan, batch,
+                                                     self.store)
+        self.store, ring_metrics = self._commit(plan, batch, self.store,
+                                                w_data, wm)
+        metrics = dict(exec_metrics, **ring_metrics)
         self._ts_next += batch.size
         self.record_commit_metrics(metrics)
         return read_vals, metrics
@@ -101,11 +120,12 @@ class BohmEngine:
     def run_stream(self, batches) -> Dict[str, jax.Array]:
         """Pipelined batches (paper §4.1.4 / §4.2): the CC phase of batch
         b+1 overlaps the execution of batch b. JAX's async dispatch gives
-        the overlap directly — each ``_step`` is enqueued without blocking,
-        so while the device executes batch b's wavefront the host is
-        already tracing/enqueuing b+1's plan; the only synchronisation is
-        the data dependency on the committed store (the paper's batch
-        barrier). Returns the metrics of the final batch.
+        the overlap directly — each ``run_batch`` enqueues its three
+        phase jits without blocking, so while the device executes batch
+        b's wavefront the host is already tracing/enqueuing b+1's plan;
+        the only synchronisation is the data dependency on the committed
+        store (the paper's batch barrier). Returns the metrics of the
+        final batch.
 
         ``repro.service.TxnService`` is the full scheduler built on this
         overlap: admission queue, explicitly split plan/exec dispatch,
@@ -145,6 +165,22 @@ class BohmEngine:
         Condition-3 barrier GC as the degenerate case)."""
         return min([s.ts for s in self._snapshots.values()]
                    + [self._ts_next])
+
+    def gc_sweep(self) -> int:
+        """Standalone precise GC at the current watermark — reclamation is
+        watermark-driven, not barrier-driven, so it can run at any point
+        between batches. A merged CC epoch (``repro.service`` conflict-
+        aware admission) commits several batches through ONE barrier and
+        thereby defers the intermediate sweeps a batch-per-barrier
+        schedule would have run; since those sweeps only touch versions
+        invisible to every legal reader, a sweep at the current watermark
+        restores the canonical ring state (bit-identical to the sequential
+        schedule's swept state — property-tested). Returns the number of
+        versions reclaimed; synchronises on it."""
+        wm = jnp.asarray(self.watermark(), jnp.int32)
+        versions, evicted = self._gc(self.store.versions, wm)
+        self.store = dataclasses.replace(self.store, versions=versions)
+        return int(evicted)
 
     def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
         """Register a reader at ``ts`` (default: now, i.e. a snapshot of
@@ -249,9 +285,16 @@ def _bucket_histogram(counts: jax.Array, edges: List[int]
 
 
 # ---------------------------------------------------------------------------
-# The two phases, exposed separately so a scheduler can overlap them across
-# batches (CC of b+1 has NO data dependency on exec of b: it needs only the
-# batch content and the host-mirrored timestamp base).
+# The phase graph. Each phase is a separate jit so a scheduler can compose
+# them across batches:
+#   * plan_phase has NO data dependency on any store — CC(b+1) dispatches
+#     while exec(b) is in flight (it needs only the batch content and the
+#     host-mirrored timestamp base);
+#   * exec_phase depends only on the committed ``store.base`` rows in the
+#     batch's read-set — exec(b+1) dispatches BEFORE commit(b) when the two
+#     batches' record footprints are disjoint (deferred commit);
+#   * commit_phase is the batch barrier: the data dependency on the
+#     previous commit's store IS the paper's one synchronisation point.
 # ---------------------------------------------------------------------------
 def plan_phase(batch: TxnBatch, ts_base: jax.Array, *, mesh,
                cc_axis: str) -> Plan:
@@ -264,14 +307,39 @@ def plan_phase(batch: TxnBatch, ts_base: jax.Array, *, mesh,
     return cc_plan(batch, ts_base)
 
 
+def exec_phase(plan: Plan, batch: TxnBatch, store: Store, *,
+               workload: Workload
+               ) -> Tuple[jax.Array, jax.Array, Dict[str, jax.Array]]:
+    """Execution wavefront only — produces the batch's version payloads
+    without touching the store. Returns (w_data, read_vals, metrics)."""
+    return execute_plan(plan, batch, store, workload)
+
+
+def commit_phase(plan: Plan, batch: TxnBatch, store: Store,
+                 w_data: jax.Array,
+                 watermark: Optional[jax.Array] = None,
+                 ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 *, mesh, cc_axis: str
+                 ) -> Tuple[Store, Dict[str, jax.Array]]:
+    """Watermark-driven sharded commit of an executed epoch. ``ts_window``
+    (default: the plan's own [ts_base, ts_base + T) span) makes the
+    global-timestamp accounting explicit so merged epochs and deferred
+    commits land ``ts_counter`` exactly where the sequential schedule
+    would."""
+    return commit(plan, batch, store, w_data, watermark,
+                  mesh=mesh, cc_axis=cc_axis, ts_window=ts_window)
+
+
 def exec_commit_phase(plan: Plan, batch: TxnBatch, store: Store,
                       watermark: Optional[jax.Array] = None, *,
                       workload: Workload, mesh, cc_axis: str):
-    """Execution wavefront + watermark-driven sharded commit (the batch
-    barrier is the data dependency on ``store``)."""
-    w_data, read_vals, metrics = execute_plan(plan, batch, store, workload)
-    new_store, ring_metrics = commit(plan, batch, store, w_data, watermark,
-                                     mesh=mesh, cc_axis=cc_axis)
+    """Fused exec + commit (the pre-phase-split shape, kept as the
+    composition it always was — ``_bohm_step`` builds on it)."""
+    w_data, read_vals, metrics = exec_phase(plan, batch, store,
+                                            workload=workload)
+    new_store, ring_metrics = commit_phase(plan, batch, store, w_data,
+                                           watermark, mesh=mesh,
+                                           cc_axis=cc_axis)
     metrics = dict(metrics, **ring_metrics)
     return new_store, read_vals, metrics
 

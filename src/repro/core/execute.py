@@ -84,11 +84,11 @@ def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
     base_reads = store.base[jnp.maximum(batch.read_set, 0)]   # [T, Rd, D]
 
     def cond(state):
-        done, _, _, waves = state
+        done, _, _, _, waves = state
         return ~jnp.all(done)
 
     def body(state):
-        done, w_data, read_out, waves = state
+        done, w_data, read_out, aborted, waves = state
         dep_done = jnp.where(plan.r_dep_txn >= 0,
                              done[jnp.maximum(plan.r_dep_txn, 0)], True)
         ready = ~done & jnp.all(dep_done, axis=1)
@@ -115,23 +115,27 @@ def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
             mode="drop")[:-1]
 
         read_out = jnp.where(ready[:, None, None], vals, read_out)
-        return (done | ready, w_data, read_out, waves + 1)
+        # abort flags fold into the loop state at each txn's ready wave
+        # (its read values are final there) — no post-loop re-apply
+        aborted = jnp.where(ready, abort, aborted)
+        return (done | ready, w_data, read_out, aborted, waves + 1)
 
     done0 = jnp.zeros((T,), bool)
     w_data0 = jnp.zeros((Nw, D), jnp.int32)
     read0 = jnp.zeros((T, Rd, D), jnp.int32)
-    done, w_data, read_out, waves = jax.lax.while_loop(
-        cond, body, (done0, w_data0, read0, jnp.zeros((), jnp.int32)))
+    done, w_data, read_out, aborted, waves = jax.lax.while_loop(
+        cond, body, (done0, w_data0, read0, jnp.zeros((T,), bool),
+                     jnp.zeros((), jnp.int32)))
 
-    # abort statistics (re-derive once on final values)
-    _, aborts = workload.apply(batch.txn_type, read_out, batch.args)
-    metrics = {"waves": waves, "aborts": jnp.sum(aborts)}
+    metrics = {"waves": waves, "aborts": jnp.sum(aborted)}
     return w_data, read_out, metrics
 
 
 def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
            watermark: Optional[jax.Array] = None, mesh=None,
-           cc_axis: str = "cc") -> Tuple[Store, Dict[str, jax.Array]]:
+           cc_axis: str = "cc",
+           ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
+           ) -> Tuple[Store, Dict[str, jax.Array]]:
     """Batch barrier: fold each record's batch-final version into the head
     cache AND commit every batch version into the persistent (sharded)
     rings, where eviction is governed by the low watermark (min active
@@ -139,9 +143,22 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     the pre-batch timestamp counter, so superseded versions die one
     barrier after they are closed — the seed's Condition-3 behaviour falls
     out as the degenerate no-reader case.
+
+    ``ts_window`` = (ts_lo, ts_hi) is the half-open global-timestamp span
+    this commit covers. It defaults to the single-batch window
+    ``[plan.ts_base, plan.ts_base + T)`` but is EXPLICIT so merged CC
+    epochs (several admitted batches, one commit) and deferred commits
+    (exec of a footprint-disjoint successor dispatched first) land the
+    counter exactly where the sequential schedule would, and so the ring
+    layer can hold the GC watermark at <= ts_lo — the condition that keeps
+    the paper's reclamation rules (§4.2.2, conditions 1+2) unchanged no
+    matter where in the pipeline the commit runs.
     """
     if watermark is None:
         watermark = store.ts_counter
+    if ts_window is None:
+        ts_window = (plan.ts_base,
+                     plan.ts_base + batch.read_set.shape[0])
     R = store.base.shape[0]
     rec = jnp.where(plan.commit_mask, plan.w_rec, R)          # drop pads
     base = jnp.concatenate([store.base,
@@ -155,8 +172,7 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     versions, ring_metrics = commit_sharded(
         store.versions, plan.w_rec, plan.w_key, plan.w_valid,
         plan.w_begin_ts, plan.w_end_ts, w_data, watermark,
-        mesh=mesh, axis=cc_axis)
-    T = batch.read_set.shape[0]
+        mesh=mesh, axis=cc_axis, ts_window=ts_window)
     return Store(base=base, base_ts=base_ts,
-                 ts_counter=store.ts_counter + T,
+                 ts_counter=jnp.asarray(ts_window[1], jnp.int32),
                  versions=versions), ring_metrics

@@ -28,11 +28,15 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.txn import TxnBatch
 from repro.store.sharded import shard_map_compat as _shard_map
 
 INF_TS = jnp.iinfo(jnp.int32).max
+# composite (record, ts) uint32 keys need R * T < 2^32 (R <= 2^20 records,
+# checked in the engine) — the one home of the batch/epoch size limit
+MAX_BATCH_TXNS = 1 << 12
 
 
 @jax.tree_util.register_dataclass
@@ -159,6 +163,78 @@ def _plan_structure():
     return Plan(w_rec=z, w_txn=z, w_end_local=z, w_valid=z, w_key=z,
                 w_slot=z, r_dep_txn=z, r_dep_slot=z, commit_mask=z,
                 ts_base=z, w_begin_ts=z, w_end_ts=z)
+
+
+# ---------------------------------------------------------------------------
+# Batch footprints: per-batch read/write record bitsets for the
+# conflict-aware admission scheduler (``repro.service.TxnService``).
+#
+# Two adjacent batches commute — their merged CC epoch is provably
+# identical to running them back-to-back — exactly when each batch's
+# write-set is disjoint from the other's read UNION write set: no write of
+# one can produce, invalidate, or be overwritten by anything the other
+# touches, so the (record, ts) sort segments never interleave, every read
+# resolves to the same producer, and the per-record ring arithmetic at
+# commit is unchanged. The same condition lets exec(b+1) run against the
+# pre-commit(b) store snapshot (exec reads only ``store.base`` rows in
+# b+1's read-set, none of which commit(b) writes).
+#
+# Footprints live on the HOST (packed numpy uint64 bitsets): admission
+# decisions are control flow, and a [R/64] word AND-reduce per candidate
+# pair costs microseconds without touching the device queue.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class BatchFootprint:
+    """Packed per-batch record bitsets (bit r set <=> record r touched)."""
+    read_bits: np.ndarray    # [ceil(R/64)] uint64, reads incl. RMW reads
+    write_bits: np.ndarray   # [ceil(R/64)] uint64
+
+    @property
+    def rw_bits(self) -> np.ndarray:
+        return self.read_bits | self.write_bits
+
+
+def _pack_bits(records: np.ndarray, num_records: int) -> np.ndarray:
+    bits = np.zeros((num_records + 63) // 64, np.uint64)
+    rec = records[records >= 0].astype(np.int64).reshape(-1)
+    np.bitwise_or.at(bits, rec >> 6, np.uint64(1) << (rec & 63).astype(
+        np.uint64))
+    return bits
+
+
+def batch_footprint(batch: TxnBatch, num_records: int) -> BatchFootprint:
+    """One pass over the batch's read/write sets at admission time."""
+    return BatchFootprint(
+        read_bits=_pack_bits(np.asarray(batch.read_set), num_records),
+        write_bits=_pack_bits(np.asarray(batch.write_set), num_records))
+
+
+def footprints_conflict(a: BatchFootprint, b: BatchFootprint) -> bool:
+    """True when the batches do NOT commute: some write of one intersects
+    the other's read-or-write set (in either direction)."""
+    return bool(np.any(a.write_bits & b.rw_bits)
+                or np.any(b.write_bits & a.rw_bits))
+
+
+def merge_footprints(a: BatchFootprint, b: BatchFootprint) -> BatchFootprint:
+    return BatchFootprint(read_bits=a.read_bits | b.read_bits,
+                          write_bits=a.write_bits | b.write_bits)
+
+
+def merge_batches(a: TxnBatch, b: TxnBatch) -> TxnBatch:
+    """Concatenate two batches into one CC epoch, preserving submission
+    order (txn t of ``b`` becomes txn ``a.size + t``, so every global
+    timestamp is identical to running the batches back-to-back). Callers
+    must have checked ``not footprints_conflict(...)`` for the merged
+    epoch to be equivalent; widths must agree (pad columns line up)."""
+    if (a.n_read, a.n_write, a.args.shape[1:]) != \
+            (b.n_read, b.n_write, b.args.shape[1:]):
+        raise ValueError("merge_batches requires identical batch widths")
+    return TxnBatch(
+        read_set=jnp.concatenate([a.read_set, b.read_set]),
+        write_set=jnp.concatenate([a.write_set, b.write_set]),
+        txn_type=jnp.concatenate([a.txn_type, b.txn_type]),
+        args=jnp.concatenate([a.args, b.args]))
 
 
 def merge_sharded_plan(plan: Plan, batch: TxnBatch) -> Plan:

@@ -1,9 +1,14 @@
-"""repro.service — pipelined transaction serving on top of the engine.
+"""repro.service — conflict-aware transaction scheduling on the engine.
 
 ``TxnService`` keeps >= 2 batches in flight: CC(b+1) is dispatched while
 exec(b) runs (the paper's two-thread-pool overlap, Fig. 3), with an
 admission queue, submit/poll/wait tickets, snapshot-aware watermarks, and
-a barriered fallback mode for A/B measurement (benchmarks/pipeline.py).
+a barriered fallback mode for A/B measurement. With
+``admission_window > 1`` the queue becomes a conflict-aware window:
+queued batches with pairwise-disjoint record footprints merge into one CC
+epoch, adjacent disjoint epochs overlap their exec phases ahead of the
+deferred commit, and conflicting batches fall back to the paper's batch
+barrier (benchmarks/admission.py quantifies the win).
 """
 from repro.service.txn_service import BatchResult, TxnService
 

@@ -1,112 +1,171 @@
-"""TxnService: the pipelined batch scheduler on top of ``BohmEngine``.
+"""TxnService: the conflict-aware batch scheduler on top of ``BohmEngine``.
 
 The paper runs two thread pools so the CC phase of batch b+1 overlaps the
-execution of batch b (§3, Fig. 3). The substrate equivalent: the engine's
-two phases are separate jitted dispatches, and the CC phase has NO data
-dependency on the committed store — it needs only the batch content and
-the host-mirrored timestamp base. ``TxnService`` exploits that:
+execution of batch b (§3, Fig. 3) and keeps ONE synchronisation point: the
+batch barrier between exec epochs. The engine's phase graph (plan / exec /
+commit as separate jitted dispatches) lets the scheduler go further:
+nothing forces *every* pair of adjacent batches through the barrier —
+batches whose record footprints are disjoint commute, so
 
-  admission queue  ``submit`` enqueues a batch and returns a ticket;
-  CC runs ahead    plans for up to ``max_inflight`` admitted batches are
-                   dispatched immediately — while exec(b) is still in
-                   flight on the device queue, CC(b+1) is already being
-                   traced/enqueued (double-buffered plan state riding
-                   JAX async dispatch);
-  exec in order    each planned batch's exec+commit step is dispatched
-                   non-blocking; the store data dependency IS the paper's
-                   batch barrier, enforced by the device queue rather than
-                   a host join;
-  backpressure     at most ``max_inflight`` exec steps may be unrealised;
-                   beyond that the oldest is joined before admitting more
-                   (bounds device-queue memory);
-  snapshots        ``begin_snapshot`` between two submits pins the
-                   watermark exactly as it would between two sequential
-                   ``run_batch`` calls — plan-time timestamp mirroring
-                   keeps the pipelined watermark identical to the
-                   barriered one, so the final store state is
-                   byte-identical pipelined or not (property-tested).
+  admission window  ``submit`` enqueues a batch (plus its read/write
+                    record bitset, computed in one pass at admission) and
+                    returns a ticket; up to ``admission_window`` queued
+                    batches are scanned per scheduling decision;
+  batch merging     a FIFO-prefix chain of queued batches whose write-sets
+                    are pairwise disjoint from each other's read∪write
+                    sets merges into ONE CC epoch: one plan, one exec
+                    wavefront, one commit over the concatenated batch —
+                    provably identical to running them back-to-back
+                    (merging preserves submission order, so every global
+                    timestamp is unchanged);
+  exec-exec overlap when two adjacent epochs' footprints are disjoint,
+                    exec(b+1) is dispatched against the SAME store
+                    snapshot BEFORE commit(b) — the deferred commit then
+                    lands in ticket order with an explicit ts window, so
+                    timestamps and watermark GC are exactly sequential;
+  conflict fallback the first conflicting batch ends the merge chain and
+                    takes the ordinary barriered path: commit(b) is the
+                    data dependency of exec(b+1), the paper's barrier;
+  CC runs ahead     plans for up to ``max_inflight`` epochs are dispatched
+                    while earlier execs are in flight (CC has no store
+                    dependency — the PR-2 pipelining, unchanged);
+  backpressure      at most ``max_inflight`` exec steps may be unrealised;
+                    beyond that the oldest is joined before admitting more;
+  snapshots         ``begin_snapshot`` first flushes the admission window
+                    (so the pin covers every batch submitted so far, same
+                    as pinning between two sequential ``run_batch`` calls)
+                    and then pins the watermark. Merged epochs commit
+                    through one barrier and so *defer* the intermediate GC
+                    sweeps of a batch-per-barrier schedule — those sweeps
+                    only touch versions invisible to every legal reader,
+                    so snapshot reads, the head store and per-ticket
+                    results stay byte-identical, and a single
+                    ``engine.gc_sweep()`` restores the canonical ring
+                    state (property-tested in tests/test_service.py).
 
-``pipelined=False`` degrades to the barriered schedule (host joins every
-batch) — the baseline the pipeline benchmark compares against.
+``admission_window=1`` (default) degrades to the FIFO pipelined schedule
+of PR 2; ``pipelined=False`` additionally joins the host after every
+epoch — the barriered baseline the admission benchmark compares against.
 """
 from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional, Tuple
+from typing import Deque, Dict, Iterable, List, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.engine import BohmEngine, SnapshotHandle
+from repro.core.plan import (MAX_BATCH_TXNS, BatchFootprint,
+                             batch_footprint, footprints_conflict,
+                             merge_batches, merge_footprints)
 from repro.core.txn import TxnBatch
 
 
 @dataclasses.dataclass(frozen=True)
 class BatchResult:
-    """Realised (or in-flight) outputs of one submitted batch."""
+    """Realised (or in-flight) outputs of one submitted batch. For a
+    batch that rode a merged CC epoch, ``read_vals`` is its own slice of
+    the epoch's outputs and ``metrics`` are the EPOCH's metrics (waves,
+    ring counters) — execution-fused batches share one wavefront."""
     ticket: int
     read_vals: jax.Array            # [T, Rd, D]
     metrics: Dict[str, jax.Array]
 
 
 @dataclasses.dataclass
-class _Planned:
+class _Admitted:
     ticket: int
     batch: TxnBatch
+    footprint: Optional[BatchFootprint]
+
+
+@dataclasses.dataclass
+class _Planned:
+    """One CC epoch: >= 1 admitted batches merged at admission time."""
+    tickets: List[int]
+    sizes: List[int]
+    batch: TxnBatch                 # concatenated epoch batch
+    footprint: Optional[BatchFootprint]
     plan: object                    # Plan (device futures)
     ts_base: int
     watermark: int
 
+    @property
+    def size(self) -> int:
+        return sum(self.sizes)
+
 
 class TxnService:
     def __init__(self, engine: BohmEngine, max_inflight: int = 2,
-                 pipelined: bool = True):
+                 pipelined: bool = True, admission_window: int = 1):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
+        if admission_window < 1:
+            raise ValueError("admission_window must be >= 1")
         self.engine = engine
         self.max_inflight = max_inflight
         self.pipelined = pipelined
+        self.admission_window = admission_window
         self._next_ticket = 0
-        self._admission: Deque[Tuple[int, TxnBatch]] = deque()
+        self._admission: Deque[_Admitted] = deque()
         self._planned: Deque[_Planned] = deque()
-        self._inflight: Deque[int] = deque()     # exec dispatched, unjoined
+        # unrealised exec steps: ONE entry (the epoch's ticket list) per
+        # dispatched epoch — a merged epoch is a single exec step, so the
+        # max_inflight bound counts epochs, not batches
+        self._inflight: Deque[List[int]] = deque()
         self._results: Dict[int, BatchResult] = {}
         self.stats = {"submitted": 0, "planned_ahead_max": 0,
-                      "backpressure_joins": 0}
+                      "backpressure_joins": 0,
+                      # scheduler decisions (conflict-aware admission)
+                      "merged_batches": 0,       # batches folded into a
+                      #                            preceding epoch
+                      "overlapped_execs": 0,     # exec(b+1) dispatched
+                      #                            before commit(b)
+                      "admission_window_occupancy": 0}  # max batches seen
+        #                                          by one window scan
+
+    @property
+    def conflict_aware(self) -> bool:
+        return self.admission_window > 1
 
     # -- client API --------------------------------------------------------
     def submit(self, batch: TxnBatch) -> int:
         """Admit one update batch; returns a ticket for ``poll``/``wait``.
-        Dispatch is non-blocking: by the time this returns, the batch's CC
-        plan (and usually its exec) is on the device queue."""
-        ticket = self._next_ticket
-        self._next_ticket += 1
-        self._admission.append((ticket, batch))
-        self.stats["submitted"] += 1
+        Dispatch is non-blocking. With ``admission_window > 1`` a batch
+        may be HELD in the admission queue until the window fills (or a
+        flush point — poll/wait/drain/snapshot — arrives), trading a
+        little admission latency for merge opportunities."""
+        ticket = self._admit(batch)
         self._pump()
         return ticket
 
     def submit_many(self, batches: Iterable[TxnBatch]) -> List[int]:
         """Admit a burst: everything is enqueued before the pump runs, so
-        the CC plan window fills to ``max_inflight`` ahead of the first
-        exec join."""
-        tickets = []
-        for batch in batches:
-            ticket = self._next_ticket
-            self._next_ticket += 1
-            self._admission.append((ticket, batch))
-            self.stats["submitted"] += 1
-            tickets.append(ticket)
+        the window scan sees the full burst and the CC plan window fills
+        to ``max_inflight`` ahead of the first exec join."""
+        tickets = [self._admit(b) for b in batches]
         self._pump()
         return tickets
+
+    def _admit(self, batch: TxnBatch) -> int:
+        if batch.size > MAX_BATCH_TXNS:
+            raise ValueError("composite uint32 keys require T <= 2^12")
+        ticket = self._next_ticket
+        self._next_ticket += 1
+        fp = batch_footprint(batch, self.engine.num_records) \
+            if self.conflict_aware else None
+        self._admission.append(_Admitted(ticket, batch, fp))
+        self.stats["submitted"] += 1
+        return ticket
 
     def poll(self, ticket: int) -> Optional[BatchResult]:
         """Non-blocking: the result if that batch's outputs are realised
         on device, else None (still in flight). A result is handed out
         ONCE — retrieval consumes the ticket, so a long-running stream
         does not accumulate every historical batch's read values."""
-        self._pump()
+        self._pump(flush=True)
         res = self._results.get(ticket)
         if res is None:
             return None
@@ -119,7 +178,7 @@ class TxnService:
     def wait(self, ticket: int) -> BatchResult:
         """Block until the batch's outputs are realised. Like ``poll``,
         retrieval consumes the ticket."""
-        self._pump()
+        self._pump(flush=True)
         res = self._results.pop(ticket)
         jax.block_until_ready(res.read_vals)
         self._note_joined(ticket)
@@ -129,18 +188,21 @@ class TxnService:
         """Join everything in flight (the host-side batch barrier) and
         discard unretrieved results — a ticket must be waited/polled
         BEFORE the drain if its read values are wanted."""
-        self._pump()
+        self._pump(flush=True)
         jax.block_until_ready(self.engine.store.base)
         self._inflight.clear()
         self._results.clear()
 
     # -- snapshot API (delegates to the engine; correctness notes) ---------
     def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
-        """Pin a reader snapshot. Called between two submits this pins the
-        timestamp after every batch submitted so far — identical to
-        pinning between two sequential ``run_batch`` calls, because the
-        engine's timestamp mirror advances at PLAN dispatch and commits
-        land in ticket order ahead of any read that could observe them."""
+        """Pin a reader snapshot covering every batch submitted so far —
+        identical to pinning between two sequential ``run_batch`` calls.
+        The admission window is flushed first: held batches are planned
+        (advancing the engine's plan-time timestamp mirror) so the pin
+        lands after them, and no epoch ever merges ACROSS a pin — the
+        pin is an epoch boundary, which keeps each epoch's plan-time
+        watermark exactly the sequential schedule's."""
+        self._pump(flush=True)
         return self.engine.begin_snapshot(ts)
 
     def release_snapshot(self, handle: SnapshotHandle) -> None:
@@ -148,23 +210,30 @@ class TxnService:
 
     def run_readonly_batch(self, batch: TxnBatch,
                            ts: Optional[int] = None):
-        """Read-only batch against the (possibly still in-flight) store:
-        the resolve step's data dependency on the ring arrays orders it
-        after every dispatched commit, so a pinned mid-pipeline snapshot
-        reads exactly the state it pinned."""
+        """Read-only batch against the (possibly still in-flight) store.
+        Only a DEFAULT-ts read flushes the admission window (it must see
+        every submitted batch); a read at an explicit ts or pinned handle
+        cannot observe held batches — the resolve step's data dependency
+        on the ring arrays already orders it after every dispatched
+        commit, so merge chains keep accumulating under a progress-poll
+        read loop and a pinned mid-window snapshot reads exactly the
+        state it pinned."""
+        self._pump(flush=ts is None)
         return self.engine.run_readonly_batch(batch, ts)
 
-    # -- pump: plan ahead, exec in order, bound the queue ------------------
-    def _pump(self) -> None:
-        """Interleaved dispatch: keep the plan window full, then exec the
-        oldest planned batch — so after exec(b) is enqueued, CC(b+1) (and
-        up to ``max_inflight`` plans total) is already on the queue before
-        exec(b+1). Everything here is non-blocking dispatch except the
-        explicit barriered mode and backpressure joins."""
+    # -- pump: merge + plan ahead, exec (maybe overlapped), bound the queue -
+    def _pump(self, flush: bool = False) -> None:
+        """Interleaved dispatch: form epochs from the admission window and
+        keep the plan window full, then exec the oldest epoch — with
+        exec(b+1) jumping ahead of commit(b) when footprints allow.
+        Everything here is non-blocking dispatch except the explicit
+        barriered mode and backpressure joins. ``flush`` forces held
+        batches through (flush points: poll/wait/drain/snapshot/readonly);
+        without it, a not-yet-full admission window may hold batches back
+        waiting for merge candidates."""
         while True:
-            progressed = self._fill_plan_window()
-            if self._planned:
-                self._exec_oldest()
+            progressed = self._fill_plan_window(flush)
+            if self._exec_ready():
                 progressed = True
             # backpressure INSIDE the dispatch loop: a burst of submits
             # never enqueues more than max_inflight unrealised exec steps
@@ -173,58 +242,138 @@ class TxnService:
                 break
 
     def _apply_backpressure(self) -> None:
-        """Bound the unrealised exec queue by joining the oldest."""
+        """Bound the unrealised exec-step queue by joining the oldest
+        epoch (any one of its results realises the whole step)."""
         while len(self._inflight) > self.max_inflight:
             oldest = self._inflight.popleft()
-            res = self._results.get(oldest)
-            if res is not None:
-                jax.block_until_ready(res.read_vals)
-                self.stats["backpressure_joins"] += 1
+            for ticket in oldest:
+                res = self._results.get(ticket)
+                if res is not None:
+                    jax.block_until_ready(res.read_vals)
+                    self.stats["backpressure_joins"] += 1
+                    break
 
-    def _fill_plan_window(self) -> bool:
-        """CC phase runs ahead: dispatch plans for admitted batches while
-        earlier exec steps are still in flight on the device queue."""
+    def _fill_plan_window(self, flush: bool = False) -> bool:
+        """CC phase runs ahead: form + plan epochs for admitted batches
+        while earlier exec steps are still in flight on the device
+        queue."""
         eng = self.engine
         progressed = False
         while self._admission and len(self._planned) < self.max_inflight:
-            ticket, batch = self._admission.popleft()
-            if batch.size > (1 << 12):
-                raise ValueError("composite uint32 keys require T <= 2^12")
+            if (self.conflict_aware and not flush
+                    and len(self._admission) < self.admission_window):
+                break        # hold: wait for merge candidates
+            tickets, sizes, batch, fp = self._pop_epoch()
             ts_base = eng._ts_next
             # the watermark the sequential schedule would use for this
-            # batch, captured at plan time (eng._ts_next == this batch's
+            # epoch, captured at plan time (eng._ts_next == this epoch's
             # ts base here) so pipelining cannot over-reclaim —
             # byte-identical GC to the barriered schedule
             wm = eng.watermark()
             plan = eng._plan(batch, jnp.asarray(ts_base, jnp.int32))
             eng._ts_next += batch.size
-            self._planned.append(_Planned(ticket, batch, plan, ts_base, wm))
+            self._planned.append(_Planned(tickets, sizes, batch, fp,
+                                          plan, ts_base, wm))
             self.stats["planned_ahead_max"] = max(
                 self.stats["planned_ahead_max"], len(self._planned))
             progressed = True
         return progressed
 
-    def _exec_oldest(self) -> None:
-        """Execution in ticket order: each step consumes the previous
-        step's store (the batch barrier as a device data dependency)."""
+    def _pop_epoch(self):
+        """Scan up to ``admission_window`` queued batches (FIFO): start
+        from the head, fold in each successor whose footprint is disjoint
+        from the epoch built so far, stop at the first conflict (merging
+        past it would reorder commits). Returns (tickets, sizes, batch,
+        footprint)."""
+        self.stats["admission_window_occupancy"] = max(
+            self.stats["admission_window_occupancy"],
+            min(len(self._admission), self.admission_window))
+        head = self._admission.popleft()
+        tickets, sizes = [head.ticket], [head.batch.size]
+        batch, fp = head.batch, head.footprint
+        scanned = 1
+        while (self._admission and scanned < self.admission_window
+               and self._can_merge(batch, fp, self._admission[0])):
+            nxt = self._admission.popleft()
+            batch = merge_batches(batch, nxt.batch)
+            fp = merge_footprints(fp, nxt.footprint)
+            tickets.append(nxt.ticket)
+            sizes.append(nxt.batch.size)
+            self.stats["merged_batches"] += 1
+            scanned += 1
+        return tickets, sizes, batch, fp
+
+    @staticmethod
+    def _can_merge(batch: TxnBatch, fp: Optional[BatchFootprint],
+                   nxt: _Admitted) -> bool:
+        if fp is None or nxt.footprint is None:
+            return False
+        if (batch.n_read, batch.n_write, batch.args.shape[1:]) != \
+                (nxt.batch.n_read, nxt.batch.n_write,
+                 nxt.batch.args.shape[1:]):
+            return False
+        if batch.size + nxt.batch.size > MAX_BATCH_TXNS:
+            return False
+        return not footprints_conflict(fp, nxt.footprint)
+
+    def _exec_ready(self) -> bool:
+        """Execution in ticket order: each commit consumes the previous
+        commit's store (the batch barrier as a device data dependency) —
+        but when the NEXT planned epoch's footprint is disjoint from this
+        one's, its exec is dispatched against the same store snapshot
+        BEFORE this epoch's commit (exec-exec overlap; both commits then
+        land in order with their plan-time watermarks and ts windows,
+        byte-identical to the barriered schedule)."""
+        if not self._planned:
+            return False
         eng = self.engine
-        p = self._planned.popleft()
-        store, read_vals, metrics = eng._exec(
-            p.plan, p.batch, eng.store,
-            jnp.asarray(p.watermark, jnp.int32))
+        e1 = self._planned.popleft()
+        w1, r1, m1 = eng._exec(e1.plan, e1.batch, eng.store)
+        e2 = None
+        if (self.pipelined and self.conflict_aware and self._planned
+                and e1.footprint is not None
+                and self._planned[0].footprint is not None
+                and not footprints_conflict(e1.footprint,
+                                            self._planned[0].footprint)):
+            e2 = self._planned.popleft()
+            w2, r2, m2 = eng._exec(e2.plan, e2.batch, eng.store)
+            self.stats["overlapped_execs"] += 1
+        self._commit_epoch(e1, w1, r1, m1)
+        if e2 is not None:
+            self._commit_epoch(e2, w2, r2, m2)
+        return True
+
+    def _commit_epoch(self, e: _Planned, w_data, read_vals,
+                      exec_metrics) -> None:
+        """Deferred-commit half of an epoch: explicit ts window so the
+        store's timestamp accounting is exactly sequential, then fan the
+        epoch outputs back out to per-ticket results."""
+        eng = self.engine
+        window = (jnp.asarray(e.ts_base, jnp.int32),
+                  jnp.asarray(e.ts_base + e.size, jnp.int32))
+        store, ring_metrics = eng._commit(
+            e.plan, e.batch, eng.store, w_data,
+            jnp.asarray(e.watermark, jnp.int32), window)
         eng.store = store
+        metrics = dict(exec_metrics, **ring_metrics)
         eng.record_commit_metrics(metrics)
-        self._results[p.ticket] = BatchResult(p.ticket, read_vals, metrics)
-        self._inflight.append(p.ticket)
+        off = 0
+        for ticket, size in zip(e.tickets, e.sizes):
+            rv = read_vals if len(e.tickets) == 1 \
+                else read_vals[off:off + size]
+            self._results[ticket] = BatchResult(ticket, rv, metrics)
+            off += size
+        self._inflight.append(list(e.tickets))
         if not self.pipelined:
             jax.block_until_ready(store.base)
             self._inflight.clear()
 
     def _note_joined(self, ticket: int) -> None:
-        try:
-            self._inflight.remove(ticket)
-        except ValueError:
-            pass
+        """A realised ticket realises its whole epoch's exec step."""
+        for i, epoch_tickets in enumerate(self._inflight):
+            if ticket in epoch_tickets:
+                del self._inflight[i]
+                return
 
 
 def _is_ready(x: jax.Array) -> bool:

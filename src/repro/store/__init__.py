@@ -10,15 +10,18 @@ The engine (``repro.core``) sits on top of this package; the serving KV
 path reaches it through ``BohmEngine.run_readonly_batch``.
 """
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
-                              gather_windows, init_ring, ring_occupancy)
+                              gather_windows, gc_ring, init_ring,
+                              ring_occupancy)
 from repro.store.sharded import (ShardedVersionStore, commit_sharded,
-                                 gather_windows_sharded, global_record_ids,
-                                 init_sharded_store, resolve_sharded,
-                                 store_occupancy, to_global, unshard)
+                                 gather_windows_sharded, gc_sharded,
+                                 global_record_ids, init_sharded_store,
+                                 resolve_sharded, store_occupancy,
+                                 to_global, unshard)
 
 __all__ = [
     "INF_TS", "VersionRing", "commit_versions", "gather_windows",
-    "init_ring", "ring_occupancy", "ShardedVersionStore", "commit_sharded",
-    "gather_windows_sharded", "global_record_ids", "init_sharded_store",
-    "resolve_sharded", "store_occupancy", "to_global", "unshard",
+    "gc_ring", "init_ring", "ring_occupancy", "ShardedVersionStore",
+    "commit_sharded", "gather_windows_sharded", "gc_sharded",
+    "global_record_ids", "init_sharded_store", "resolve_sharded",
+    "store_occupancy", "to_global", "unshard",
 ]

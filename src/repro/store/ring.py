@@ -39,7 +39,7 @@ per shard over the ``cc`` mesh axis.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -93,7 +93,8 @@ def gather_windows(ring: VersionRing, records: jax.Array
 def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
                     w_valid: jax.Array, w_begin_ts: jax.Array,
                     w_end_ts: jax.Array, w_data: jax.Array,
-                    watermark: jax.Array
+                    watermark: jax.Array,
+                    ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
                     ) -> Tuple[VersionRing, Dict[str, jax.Array]]:
     """Batch-barrier ring maintenance: GC conditions 1+2, then commit ALL
     of the batch's versions (not just segment-final ones).
@@ -110,12 +111,23 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
     sorted *within* contiguous shard blocks (as ``merge_sharded_plan``
     emits) — a stable re-sort here restores the global record order.
 
+    ``ts_window`` = (ts_lo, ts_hi), the global-timestamp span this commit
+    covers, clamps the eviction watermark to ``min(watermark, ts_lo)``: a
+    legal watermark never exceeds the epoch's first timestamp (it is
+    min(active reader snapshots, ts at plan time)), so a well-scheduled
+    caller sees NO behaviour change — the clamp pins GC conditions 1+2
+    in place when merged epochs or deferred commits hand the window in
+    out of lock-step with the ring's own notion of "now".
+
     Record ids must already be LOCAL to this ring (callers with a sharded
     store mask foreign records to INF_TS / valid=False and divide owned
     ids down to the shard-local index before calling).
     """
     R, K = ring.begin.shape
     watermark = jnp.asarray(watermark, jnp.int32)
+    if ts_window is not None:
+        watermark = jnp.minimum(watermark,
+                                jnp.asarray(ts_window[0], jnp.int32))
 
     # -- 1. precise reclamation below the watermark ------------------------
     live = ring.begin != INF_TS
@@ -180,3 +192,31 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
         "ring_occ_mean": jnp.mean(occ.astype(jnp.float32)),
     }
     return new_ring, metrics
+
+
+def gc_ring(ring: VersionRing, watermark: jax.Array
+            ) -> Tuple[VersionRing, jax.Array]:
+    """Standalone precise GC sweep: reclaim every version with
+    ``end <= watermark`` (conditions 1+2 — no active or future reader can
+    resolve inside a reclaimed version's [begin, end) window), touching
+    nothing else. Returns (ring, evicted count).
+
+    Reclamation is watermark-driven, not barrier-driven: ``commit_versions``
+    runs this same condition as its step 1, but a merged CC epoch commits
+    several admitted batches in ONE barrier and so skips the intermediate
+    sweeps a batch-per-barrier schedule would have run. Those skipped
+    sweeps only ever touch versions that are invisible to every legal
+    reader — payloads are untouched and insertion is pure ring arithmetic
+    — so the schedules differ transiently in which garbage slots are
+    already marked empty, nothing more. A sweep at the CURRENT watermark
+    (>= every watermark any prefix of the schedule used) erases exactly
+    that difference: state after ``gc_ring(w)`` is a pure function of the
+    committed history, whichever admission schedule produced it.
+    """
+    watermark = jnp.asarray(watermark, jnp.int32)
+    live = ring.begin != INF_TS
+    dead = live & (ring.end <= watermark)          # open versions: end==INF
+    return VersionRing(begin=jnp.where(dead, INF_TS, ring.begin),
+                       end=jnp.where(dead, INF_TS, ring.end),
+                       payload=ring.payload,
+                       head=ring.head), jnp.sum(dead)

@@ -39,7 +39,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
-                              gather_windows, ring_occupancy)
+                              gather_windows, gc_ring, ring_occupancy)
 
 PAD_KEY = jnp.uint32(0xFFFFFFFF)
 
@@ -160,7 +160,8 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
                    w_key: jax.Array, w_valid: jax.Array,
                    w_begin_ts: jax.Array, w_end_ts: jax.Array,
                    w_data: jax.Array, watermark: jax.Array,
-                   mesh=None, axis: str = "cc"
+                   mesh=None, axis: str = "cc",
+                   ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
                    ) -> Tuple[ShardedVersionStore, Dict[str, jax.Array]]:
     """Commit ALL batch versions into the partitioned rings.
 
@@ -168,13 +169,16 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
     every shard); each shard commits only the records it owns. Metrics are
     aggregated to match the single-ring ``commit_versions`` contract,
     except ``ring_overwrote_rec`` which stays per-shard [n, Rl] (use
-    ``to_global`` for the [R] view).
+    ``to_global`` for the [R] view). ``ts_window`` (the epoch's global
+    timestamp span — see ``commit_versions``) is a global scalar pair, so
+    it replicates to every shard unchanged.
     """
     n = store.n_shards
     if n == 1:
         ring, metrics = commit_versions(_ring0(store), w_rec, w_key,
                                         w_valid, w_begin_ts, w_end_ts,
-                                        w_data, watermark)
+                                        w_data, watermark,
+                                        ts_window=ts_window)
         metrics["ring_overwrote_rec"] = metrics["ring_overwrote_rec"][None]
         return dataclasses.replace(
             store, rings=jax.tree.map(lambda x: x[None], ring)), metrics
@@ -183,7 +187,8 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
         rec_l, key_l, owned = _mask_to_shard(n, shard, w_rec, w_key,
                                              w_valid)
         return commit_versions(ring_s, rec_l, key_l, owned, w_begin_ts,
-                               w_end_ts, w_data, watermark)
+                               w_end_ts, w_data, watermark,
+                               ts_window=ts_window)
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
@@ -230,6 +235,17 @@ def _metrics_struct():
     return {"ring_evicted": z, "ring_overflow_dropped": z,
             "ring_overwrote_live": z, "ring_overwrote_rec": z,
             "ring_occ_max": z, "ring_occ_mean": z}
+
+
+def gc_sharded(store: ShardedVersionStore, watermark: jax.Array
+               ) -> Tuple[ShardedVersionStore, jax.Array]:
+    """Standalone watermark GC sweep over every shard (see ``gc_ring``).
+    The condition ``end <= watermark`` is per-slot elementwise with a
+    global scalar watermark, so the same expression runs unchanged over
+    the stacked [n, Rl, K] arrays on ANY substrate — mesh-sharded device
+    arrays, vmapped logical shards, or the single ring."""
+    rings, evicted = gc_ring(store.rings, watermark)
+    return dataclasses.replace(store, rings=rings), evicted
 
 
 # ---------------------------------------------------------------------------

@@ -154,6 +154,65 @@ def test_overflow_histogram_identifies_hot_record():
     assert hist_total == 8               # every record in exactly 1 bucket
 
 
+def test_overflow_stats_empty_histogram():
+    """No overflow ever: totals zero, no top records, every record sits
+    in the first histogram bucket."""
+    eng = BohmEngine(8, _inc_workload(), ring_slots=8)
+    eng.run_batch(_random_batch(0, 8))       # K=8 ring: nothing overflows
+    stats = eng.overflow_stats()
+    assert stats["total_overwrites"] == 0
+    assert stats["records_affected"] == 0
+    assert stats["top_records"] == []
+    assert stats["histogram"][0] == ("0", 8)
+    assert sum(n for _, n in stats["histogram"]) == 8
+
+
+def test_overflow_stats_top_k_larger_than_record_count():
+    """top_k > R must clamp, not crash, and still report only the
+    records that actually overflowed."""
+    def bump(vals, args):
+        return vals.at[..., 0].add(1), jnp.zeros((), bool)
+
+    wl = Workload(name="hot", n_read=1, n_write=1, payload_words=1,
+                  branches=(bump,))
+    eng = BohmEngine(4, wl, ring_slots=2)
+    hot = make_batch(np.zeros((8, 1)), np.zeros((8, 1)),
+                     np.zeros(8), np.zeros((8, 1)))
+    eng.begin_snapshot()                     # pin: overwrites count
+    eng.run_batch(hot)
+    stats = eng.overflow_stats(top_k=100)
+    assert len(stats["top_records"]) <= 4
+    assert stats["top_records"][0][0] == 0
+    assert stats["records_affected"] == 1
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_overflow_stats_bucket_edges_stable_across_shardings(n_shards):
+    """The same stream must produce the IDENTICAL stats dict — totals,
+    top-k, and every histogram bucket edge — through a sharded store and
+    the single ring (the histogram is computed on the re-globalised
+    per-record counts, so partitioning must be invisible)."""
+    def bump(vals, args):
+        return vals.at[..., 0].add(1), jnp.zeros((), bool)
+
+    wl = Workload(name="hot", n_read=1, n_write=1, payload_words=1,
+                  branches=(bump,))
+    engines = [BohmEngine(8, wl, ring_slots=2, n_shards=n)
+               for n in (1, n_shards)]
+    rng = np.random.default_rng(5)
+    recs = rng.integers(0, 3, (6, 8, 1))     # 3 hot-ish records, 6 batches
+    for eng in engines:
+        eng.begin_snapshot()                 # pin: versions must survive
+        for i in range(6):
+            eng.run_batch(make_batch(recs[i], recs[i],
+                                     np.zeros(8), np.zeros((8, 1))))
+    s1, sn = (e.overflow_stats(top_k=8) for e in engines)
+    assert s1["total_overwrites"] > 0        # the stream does overflow
+    assert s1 == sn
+    np.testing.assert_array_equal(np.asarray(engines[0].overflow_by_record()),
+                                  np.asarray(engines[1].overflow_by_record()))
+
+
 # ---------------------------------------------------------------------------
 # 4. mesh substrate: shard_map commit/resolve == logical == single ring
 # (subprocess with 4 forced host devices — repo convention)
