@@ -11,6 +11,9 @@
               shards, pipelined vs barriered (subprocess: 4 host devices)
   admission   conflict-aware admission: merged CC epochs + exec-exec
               overlap vs the barriered baseline, hot/cold skewed streams
+  spill       hierarchical version storage: fixed-K drop vs spill vs
+              adaptive-K on a pinned hot-set update stream (found-rate
+              for historical reads + txn/s at equal memory budget)
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
 
@@ -68,6 +71,11 @@ def bench_admission(quick: bool = False):
     admission.run(quick)
 
 
+def bench_spill(quick: bool = False):
+    from benchmarks import spill
+    spill.run(quick)
+
+
 def bench_kernels():
     from benchmarks import kernels
     kernels.run()
@@ -84,8 +92,8 @@ def main() -> None:
                     help="skip the slow sweep dimensions")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
-                         "smallbank,snapshot,pipeline,admission,kernels,"
-                         "serving")
+                         "smallbank,snapshot,pipeline,admission,spill,"
+                         "kernels,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -110,6 +118,9 @@ def main() -> None:
     if want("admission"):
         print("== admission (conflict-aware scheduler) ==", flush=True)
         bench_admission(args.quick)
+    if want("spill"):
+        print("== spill (hierarchical version storage) ==", flush=True)
+        bench_spill(args.quick)
     if want("kernels"):
         print("== kernels ==", flush=True)
         bench_kernels()

@@ -42,13 +42,16 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core import plan as plan_mod
 from repro.core.execute import (Store, commit, execute_plan, init_store,
                                 store_from_base)
 from repro.core.plan import MAX_BATCH_TXNS, Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
-from repro.store import (gather_windows_sharded, gc_sharded,
-                         resolve_sharded, store_occupancy, to_global)
+from repro.store import (INF_TS, from_global, gather_windows_sharded,
+                         gc_sharded, reassign_k, resolve_sharded,
+                         store_occupancy, to_global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,7 +65,21 @@ class BohmEngine:
     def __init__(self, num_records: int, workload: Workload,
                  mesh=None, cc_axis: str = "cc", ring_slots: int = 4,
                  resolve_interpret: Optional[bool] = None,
-                 n_shards: Optional[int] = None):
+                 n_shards: Optional[int] = None,
+                 spill_buckets: Optional[int] = None,
+                 spill_slots: int = 8,
+                 adaptive_k: bool = False, k_min: int = 1,
+                 k_max: Optional[int] = None):
+        """``spill_slots`` > 0 (default 8) attaches a per-shard spill pool
+        of ``spill_buckets`` x ``spill_slots`` slots (default: one bucket
+        per 4 local records) — live K-ring evictions land there instead
+        of being dropped, and snapshot reads fall through primary ->
+        spill; ``spill_slots=0`` restores the bare drop-oldest ring.
+        ``adaptive_k=True`` allocates rings at ``k_max`` physical slots
+        (default 2x ``ring_slots``) but caps every record at ``ring_slots``
+        effective slots, then lets ``gc_sweep`` move capacity from cold
+        records to hot ones within the fixed budget R x ``ring_slots``
+        (see repro/store/policy.py)."""
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
@@ -70,19 +87,44 @@ class BohmEngine:
         self.mesh = mesh
         self.cc_axis = cc_axis
         self.ring_slots = ring_slots
+        self.adaptive_k = bool(adaptive_k)
+        self.k_min = int(k_min)
+        self.k_max = int(k_max if k_max is not None
+                         else (2 * ring_slots if adaptive_k
+                               else ring_slots))
+        if self.k_max < ring_slots:
+            raise ValueError("k_max must be >= ring_slots")
+        if not 1 <= self.k_min <= ring_slots:
+            raise ValueError("k_min must be in [1, ring_slots] (k_eff "
+                             "starts at ring_slots)")
         if n_shards is None:
             n_shards = mesh.shape[cc_axis] if (
                 mesh is not None and cc_axis in mesh.shape) else 1
         self.n_shards = int(n_shards)
+        records_local = -(-num_records // self.n_shards)
+        self.spill_slots = int(spill_slots)
+        self.spill_buckets = int(spill_buckets if spill_buckets is not None
+                                 else max(1, records_local // 4)
+                                 ) if self.spill_slots > 0 else 0
         # None = auto-select from jax.default_backend() inside the kernel
         self.resolve_interpret = resolve_interpret
         self.store = init_store(num_records, workload.payload_words,
-                                ring_slots=ring_slots,
-                                n_shards=self.n_shards)
+                                ring_slots=self.k_max,
+                                n_shards=self.n_shards,
+                                spill_buckets=self.spill_buckets,
+                                spill_slots=self.spill_slots,
+                                k_init=ring_slots)
         self._ts_next = 1                  # host mirror of store.ts_counter
         self._snapshots: Dict[int, SnapshotHandle] = {}
         self._next_sid = 0
         self._overflow = jnp.zeros_like(self.store.versions.rings.head)
+        self._overflow_dead = jnp.zeros_like(self.store.versions.rings.head)
+        self._spill_totals = {"spill_admitted": 0, "spill_dropped": 0,
+                              "spill_overwrote_pinned": 0}
+        # adaptive-K hysteresis: a record donates capacity only after
+        # sitting idle across two consecutive policy passes
+        self._stable_idle = np.zeros((num_records,), bool)
+        self._commits_since_sweep = 0
         self._step = jax.jit(functools.partial(
             _bohm_step, workload=workload, mesh=mesh, cc_axis=cc_axis))
         self._plan = jax.jit(functools.partial(
@@ -107,11 +149,12 @@ class BohmEngine:
         if batch.size > MAX_BATCH_TXNS:
             raise ValueError("composite uint32 keys require T <= 2^12")
         wm = jnp.asarray(self.watermark(), jnp.int32)
+        pins = self.pin_array()
         plan = self._plan(batch, self.store.ts_counter)
         w_data, read_vals, exec_metrics = self._exec(plan, batch,
                                                      self.store)
         self.store, ring_metrics = self._commit(plan, batch, self.store,
-                                                w_data, wm)
+                                                w_data, wm, None, pins)
         metrics = dict(exec_metrics, **ring_metrics)
         self._ts_next += batch.size
         self.record_commit_metrics(metrics)
@@ -142,13 +185,20 @@ class BohmEngine:
 
     def reset_store(self, base: jax.Array,
                     base_ts: Optional[jax.Array] = None) -> None:
-        """Reinitialise committed state (head cache + rings) from
+        """Reinitialise committed state (head cache + rings + spill) from
         ``base``."""
-        self.store = store_from_base(base, base_ts, self.ring_slots,
-                                     self.n_shards)
+        self.store = store_from_base(base, base_ts, self.k_max,
+                                     self.n_shards,
+                                     spill_buckets=self.spill_buckets,
+                                     spill_slots=self.spill_slots,
+                                     k_init=self.ring_slots)
         self._ts_next = 1
         self._snapshots.clear()
         self._overflow = jnp.zeros_like(self.store.versions.rings.head)
+        self._overflow_dead = jnp.zeros_like(self.store.versions.rings.head)
+        self._spill_totals = {k: 0 for k in self._spill_totals}
+        self._stable_idle = np.zeros((self.num_records,), bool)
+        self._commits_since_sweep = 0
 
     # -- snapshot-read path (zero CC bookkeeping) --------------------------
     def current_ts(self) -> int:
@@ -166,6 +216,19 @@ class BohmEngine:
         return min([s.ts for s in self._snapshots.values()]
                    + [self._ts_next])
 
+    def pin_array(self) -> jax.Array:
+        """Registered snapshot pin timestamps as a device vector, sorted
+        and INF_TS-padded to a power-of-two length (a pad pin never stabs
+        any closed version). This is the commit path's input for the
+        pin-precise live/dead eviction split and the spill tier's
+        admission/victim decisions."""
+        pins = sorted(s.ts for s in self._snapshots.values())
+        n = 1
+        while n < len(pins):
+            n *= 2
+        pins = pins + [int(INF_TS)] * (n - len(pins))
+        return jnp.asarray(pins, jnp.int32)
+
     def gc_sweep(self) -> int:
         """Standalone precise GC at the current watermark — reclamation is
         watermark-driven, not barrier-driven, so it can run at any point
@@ -175,12 +238,51 @@ class BohmEngine:
         schedule would have run; since those sweeps only touch versions
         invisible to every legal reader, a sweep at the current watermark
         restores the canonical ring state (bit-identical to the sequential
-        schedule's swept state — property-tested). Returns the number of
-        versions reclaimed; synchronises on it."""
+        schedule's swept state — property-tested). The sweep covers the
+        spill pools too: once every pin at or below a spilled version's
+        window releases, the slot drains back to free.
+
+        With ``adaptive_k`` the sweep boundary is also the policy
+        boundary: the accumulated live-eviction histogram drives one
+        ``reassign_k`` pass (hot records grow toward ``k_max``, pressure-
+        free ones shrink toward ``k_min``, total budget fixed). The pass
+        is a fixpoint of the pressure vector, so consecutive sweeps with
+        no commits in between leave the store byte-identical.
+
+        Returns the number of versions reclaimed (rings + spill);
+        synchronises on it."""
         wm = jnp.asarray(self.watermark(), jnp.int32)
         versions, evicted = self._gc(self.store.versions, wm)
+        # the policy runs only when commits landed since the last sweep:
+        # a sweep is pure reclamation, so with nothing new committed the
+        # pressure/occupancy inputs are unchanged and rerunning the pass
+        # (or advancing the idle streak) would break byte-idempotence
+        if self.adaptive_k and self._commits_since_sweep > 0:
+            pressure = np.asarray(to_global(versions, self._overflow))
+            k_glob = np.asarray(to_global(versions, versions.k_eff))
+            occ = np.asarray(store_occupancy(versions))
+            idle = occ <= 1
+            new_k = reassign_k(pressure, k_glob, k_min=self.k_min,
+                               k_max=self.k_max, k_base=self.ring_slots,
+                               occupancy=occ,
+                               stable_idle=idle & self._stable_idle,
+                               budget=self.num_records * self.ring_slots)
+            self._stable_idle = idle
+            self._commits_since_sweep = 0
+            k_sh = from_global(versions, jnp.asarray(new_k),
+                               pad_value=self.k_min)
+            # insertion cursors must stay inside the (possibly shrunk)
+            # effective window; grown records keep their cursor as-is
+            rings = dataclasses.replace(
+                versions.rings, head=versions.rings.head % k_sh)
+            versions = dataclasses.replace(versions, rings=rings,
+                                           k_eff=k_sh)
         self.store = dataclasses.replace(self.store, versions=versions)
         return int(evicted)
+
+    def k_by_record(self) -> jax.Array:
+        """[R] effective primary-ring capacity per record (adaptive K)."""
+        return to_global(self.store.versions, self.store.versions.k_eff)
 
     def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
         """Register a reader at ``ts`` (default: now, i.e. a snapshot of
@@ -208,9 +310,11 @@ class BohmEngine:
     def snapshot_read(self, records, ts: Optional[int] = None
                       ) -> Tuple[jax.Array, jax.Array]:
         """Resolve ``records`` [B] at snapshot ``ts`` through the Pallas
-        kernel, per shard. Returns (vals [B, D], found [B]); found=False
-        means the visible version was never written or fell off the
-        K-ring."""
+        kernel, per shard, falling through primary ring -> spill pool.
+        Returns (vals [B, D], found [B]); found=False means the visible
+        version was never written, or was evicted while unpinned (dead),
+        or was dropped by a saturated spill pool — never a stale
+        payload."""
         if isinstance(ts, SnapshotHandle):
             ts = ts.ts
         if ts is None:
@@ -241,20 +345,38 @@ class BohmEngine:
     # -- K-ring pressure diagnostics ---------------------------------------
     def record_commit_metrics(self, metrics: Dict[str, jax.Array]) -> None:
         """Accumulate per-record ring pressure from a commit's metrics
-        (called by run_batch and by TxnService for pipelined commits)."""
+        (called by run_batch and by TxnService for pipelined commits).
+        Live and dead evictions accumulate separately: only the live
+        histogram feeds the spill/adaptive-K policy."""
         self._overflow = self._overflow + metrics["ring_overwrote_rec"]
+        self._overflow_dead = (self._overflow_dead
+                               + metrics["ring_overwrote_dead_rec"])
+        self._commits_since_sweep += 1
+        # accumulate as device scalars — int() here would join the host
+        # on every commit and serialize the scheduler's dispatch-ahead
+        # pipeline; spill_stats() converts on demand
+        for k in self._spill_totals:
+            if k in metrics:
+                self._spill_totals[k] = self._spill_totals[k] + metrics[k]
 
     def overflow_by_record(self) -> jax.Array:
-        """[R] cumulative count of live-version overwrites per record —
-        how often each key's snapshot history was truncated by K-ring
-        overflow since the last reset."""
+        """[R] cumulative count of LIVE version evictions per record —
+        how often each key's reader-visible snapshot history was pushed
+        out of the primary K-ring (and offered to the spill tier) since
+        the last reset. Dead evictions (no registered pin inside the
+        version's window, end below the future-reader floor) are tracked
+        separately — see ``overflow_stats``."""
         return to_global(self.store.versions, self._overflow)
 
     def overflow_stats(self, top_k: int = 8) -> Dict[str, object]:
-        """Host-side K-ring pressure summary: total overwrites, the top-k
-        hottest records, and a histogram of per-record overwrite counts
-        (powers-of-two buckets). Diagnostic API — synchronises."""
+        """Host-side K-ring pressure summary: total LIVE evictions, the
+        top-k hottest records, and a histogram of per-record live-eviction
+        counts (powers-of-two buckets) — the adaptive-K policy input.
+        Dead evictions (versions no legal reader could still resolve)
+        are split out under ``dead_*`` keys and never enter the live
+        histogram. Diagnostic API — synchronises."""
         counts = self.overflow_by_record()
+        dead = to_global(self.store.versions, self._overflow_dead)
         k = min(top_k, self.num_records)
         top_vals, top_recs = jax.lax.top_k(counts, k)
         edges = [0, 1, 2, 4, 8, 16, 32, 64]
@@ -265,7 +387,20 @@ class BohmEngine:
             "top_records": [(int(r), int(v))
                             for r, v in zip(top_recs, top_vals) if v > 0],
             "histogram": hist,
+            "dead_overwrites": int(jnp.sum(dead)),
+            "dead_histogram": _bucket_histogram(dead, edges),
         }
+
+    def spill_stats(self) -> Dict[str, int]:
+        """Spill-tier summary: current pool occupancy/capacity plus the
+        cumulative admitted / dropped / pinned-overwrite counters (the
+        found=False budget historical reads are exposed to)."""
+        spill = self.store.versions.spill
+        occupancy = 0 if spill is None else int(jnp.sum(spill.rec >= 0))
+        capacity = 0 if spill is None else (
+            self.n_shards * self.spill_buckets * self.spill_slots)
+        return dict({k: int(v) for k, v in self._spill_totals.items()},
+                    spill_occupancy=occupancy, spill_capacity=capacity)
 
 
 def _bucket_histogram(counts: jax.Array, edges: List[int]
@@ -319,39 +454,44 @@ def commit_phase(plan: Plan, batch: TxnBatch, store: Store,
                  w_data: jax.Array,
                  watermark: Optional[jax.Array] = None,
                  ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
+                 pin_ts: Optional[jax.Array] = None,
                  *, mesh, cc_axis: str
                  ) -> Tuple[Store, Dict[str, jax.Array]]:
     """Watermark-driven sharded commit of an executed epoch. ``ts_window``
     (default: the plan's own [ts_base, ts_base + T) span) makes the
     global-timestamp accounting explicit so merged epochs and deferred
     commits land ``ts_counter`` exactly where the sequential schedule
-    would."""
+    would. ``pin_ts`` (the registered snapshot pins at plan time) drives
+    the pin-precise live/dead eviction split and spill admission."""
     return commit(plan, batch, store, w_data, watermark,
-                  mesh=mesh, cc_axis=cc_axis, ts_window=ts_window)
+                  mesh=mesh, cc_axis=cc_axis, ts_window=ts_window,
+                  pin_ts=pin_ts)
 
 
 def exec_commit_phase(plan: Plan, batch: TxnBatch, store: Store,
-                      watermark: Optional[jax.Array] = None, *,
+                      watermark: Optional[jax.Array] = None,
+                      pin_ts: Optional[jax.Array] = None, *,
                       workload: Workload, mesh, cc_axis: str):
     """Fused exec + commit (the pre-phase-split shape, kept as the
     composition it always was — ``_bohm_step`` builds on it)."""
     w_data, read_vals, metrics = exec_phase(plan, batch, store,
                                             workload=workload)
     new_store, ring_metrics = commit_phase(plan, batch, store, w_data,
-                                           watermark, mesh=mesh,
-                                           cc_axis=cc_axis)
+                                           watermark, pin_ts=pin_ts,
+                                           mesh=mesh, cc_axis=cc_axis)
     metrics = dict(metrics, **ring_metrics)
     return new_store, read_vals, metrics
 
 
 def _bohm_step(store: Store, batch: TxnBatch,
-               watermark: Optional[jax.Array] = None, *,
+               watermark: Optional[jax.Array] = None,
+               pin_ts: Optional[jax.Array] = None, *,
                workload: Workload, mesh, cc_axis: str):
     # --- CC phase: timestamps + placeholder versions + read annotations ---
     plan = plan_phase(batch, store.ts_counter, mesh=mesh, cc_axis=cc_axis)
     # --- batch barrier (the only synchronisation point) -------------------
     # --- execution phase + watermark-driven GC / commit -------------------
-    return exec_commit_phase(plan, batch, store, watermark,
+    return exec_commit_phase(plan, batch, store, watermark, pin_ts,
                              workload=workload, mesh=mesh, cc_axis=cc_axis)
 
 

@@ -51,17 +51,24 @@ class Store:
 
 def init_store(num_records: int, payload_words: int,
                init_value: int = 0, ring_slots: int = 4,
-               n_shards: int = 1) -> Store:
+               n_shards: int = 1, spill_buckets: int = 0,
+               spill_slots: int = 0,
+               k_init: Optional[int] = None) -> Store:
     base = jnp.full((num_records, payload_words), init_value, jnp.int32)
     base_ts = jnp.zeros((num_records,), jnp.int32)
     return Store(
         base=base, base_ts=base_ts,
         ts_counter=jnp.ones((), jnp.int32),
-        versions=init_sharded_store(base, base_ts, ring_slots, n_shards))
+        versions=init_sharded_store(base, base_ts, ring_slots, n_shards,
+                                    spill_buckets=spill_buckets,
+                                    spill_slots=spill_slots,
+                                    k_init=k_init))
 
 
 def store_from_base(base: jax.Array, base_ts: Optional[jax.Array] = None,
-                    ring_slots: int = 4, n_shards: int = 1) -> Store:
+                    ring_slots: int = 4, n_shards: int = 1,
+                    spill_buckets: int = 0, spill_slots: int = 0,
+                    k_init: Optional[int] = None) -> Store:
     """Store whose initial state (head + ring slot 0) is ``base``."""
     base = jnp.asarray(base, jnp.int32)
     if base_ts is None:
@@ -69,7 +76,10 @@ def store_from_base(base: jax.Array, base_ts: Optional[jax.Array] = None,
     return Store(base=base, base_ts=base_ts,
                  ts_counter=jnp.ones((), jnp.int32),
                  versions=init_sharded_store(base, base_ts, ring_slots,
-                                             n_shards))
+                                             n_shards,
+                                             spill_buckets=spill_buckets,
+                                             spill_slots=spill_slots,
+                                             k_init=k_init))
 
 
 def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
@@ -134,7 +144,8 @@ def execute_plan(plan: Plan, batch: TxnBatch, store: Store,
 def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
            watermark: Optional[jax.Array] = None, mesh=None,
            cc_axis: str = "cc",
-           ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
+           ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
+           pin_ts: Optional[jax.Array] = None
            ) -> Tuple[Store, Dict[str, jax.Array]]:
     """Batch barrier: fold each record's batch-final version into the head
     cache AND commit every batch version into the persistent (sharded)
@@ -153,6 +164,10 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     layer can hold the GC watermark at <= ts_lo — the condition that keeps
     the paper's reclamation rules (§4.2.2, conditions 1+2) unchanged no
     matter where in the pipeline the commit runs.
+
+    ``pin_ts`` [P] — the registered snapshot pins (INF_TS-padded), the
+    input to the ring layer's pin-precise live/dead eviction split and
+    the spill tier's admission/victim decisions.
     """
     if watermark is None:
         watermark = store.ts_counter
@@ -172,7 +187,7 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     versions, ring_metrics = commit_sharded(
         store.versions, plan.w_rec, plan.w_key, plan.w_valid,
         plan.w_begin_ts, plan.w_end_ts, w_data, watermark,
-        mesh=mesh, axis=cc_axis, ts_window=ts_window)
+        mesh=mesh, axis=cc_axis, ts_window=ts_window, pin_ts=pin_ts)
     return Store(base=base, base_ts=base_ts,
                  ts_counter=jnp.asarray(ts_window[1], jnp.int32),
                  versions=versions), ring_metrics

@@ -31,9 +31,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.txn import TxnBatch
+from repro.store.ring import INF_TS  # single home of the ts sentinel
 from repro.store.sharded import shard_map_compat as _shard_map
 
-INF_TS = jnp.iinfo(jnp.int32).max
 # composite (record, ts) uint32 keys need R * T < 2^32 (R <= 2^20 records,
 # checked in the engine) — the one home of the batch/epoch size limit
 MAX_BATCH_TXNS = 1 << 12

@@ -1,12 +1,19 @@
-"""Compatibility shim — the version-ring subsystem moved to ``repro.store``.
+"""DEPRECATED shim — the version-ring subsystem lives in ``repro.store``.
 
-The single-ring primitives live in ``repro.store.ring``; the
-record-partitioned store (rings sharded over the ``cc`` mesh axis) is
-``repro.store.sharded.ShardedVersionStore``. This module re-exports the
-single-ring API so existing imports keep working.
+Import from ``repro.store`` (or the submodules ``repro.store.ring`` /
+``repro.store.sharded`` / ``repro.store.spill`` / ``repro.store.policy``)
+instead.  This module is a pure re-export kept for one deprecation cycle;
+it defines nothing of its own — in particular the ``INF_TS`` sentinel has
+exactly one home, ``repro.store.ring`` — and warns on import.
 """
+import warnings
+
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, init_ring, ring_occupancy)
+
+warnings.warn(
+    "repro.core.versions is deprecated; import from repro.store instead",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["INF_TS", "VersionRing", "commit_versions", "gather_windows",
            "init_ring", "ring_occupancy"]

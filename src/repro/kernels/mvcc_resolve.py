@@ -18,6 +18,16 @@ Returns (vals [B, D], found [B] bool). Grid tiles (B, D); the visibility
 mask is recomputed per D-tile (cheap VPU work) so payload tiles stream
 through VMEM independently — the kernel is memory-bound by design and its
 roofline is the data tile traffic.
+
+``mvcc_resolve_masked`` is the second level of the hierarchical read
+path (primary ring -> spill pool, see repro/store/spill.py): spill
+buckets are SHARED across records, so each candidate slot carries an
+owner record id and the visibility test gains a ``rec == want`` term —
+fused into the same interval test rather than materialising a masked
+copy of the window, which would double the HBM traffic of exactly the
+reads that already missed the primary ring. Both kernels share one
+grid/tiling scheme and the same interpret-mode auto-selection, so
+primary and spill resolution behave identically across backends.
 """
 from __future__ import annotations
 
@@ -95,4 +105,75 @@ def mvcc_resolve(begin: jax.Array, end: jax.Array, data: jax.Array,
         ],
         interpret=interpret,
     )(ts, begin, end, data)
+    return vals[:b, :d], found[:b]
+
+
+def _resolve_masked_kernel(ts_ref, want_ref, begin_ref, end_ref, rec_ref,
+                           data_ref, out_ref, found_ref):
+    ts = ts_ref[...][:, None]                       # [Bb, 1]
+    want = want_ref[...][:, None]                   # [Bb, 1]
+    begin = begin_ref[...]                          # [Bb, K]
+    end = end_ref[...]
+    vis = (begin <= ts) & (ts < end) & (rec_ref[...] == want)
+    score = jnp.where(vis, begin, NEG_INF)
+    best = jnp.max(score, axis=1)                   # [Bb]
+    sel = vis & (score == best[:, None])            # exactly one in a
+    #                                                 consistent store
+    data = data_ref[...]                            # [Bb, K, Dd]
+    out_ref[...] = jnp.sum(
+        jnp.where(sel[:, :, None], data, jnp.zeros_like(data)), axis=1)
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        found_ref[...] = best > NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret"))
+def mvcc_resolve_masked(begin: jax.Array, end: jax.Array, rec: jax.Array,
+                        want: jax.Array, data: jax.Array, ts: jax.Array,
+                        *, block_b: int = 256, block_d: int = 128,
+                        interpret: Optional[bool] = None):
+    """Visibility resolution over SHARED candidate windows: slot (i, k) is
+    considered for read i only when ``rec[i, k] == want[i]`` (the spill
+    pool's bucket layout — several records share one bucket). Pad slots
+    carry rec = -1 and want >= 0, so pads never match."""
+    if interpret is None:       # auto-select, overridable per call
+        interpret = default_interpret()
+    b, k = begin.shape
+    d = data.shape[-1]
+    bb = min(block_b, b)
+    dd = min(block_d, d)
+    pad_b = (-b) % bb
+    pad_d = (-d) % dd
+    if pad_b or pad_d:
+        begin = jnp.pad(begin, ((0, pad_b), (0, 0)))
+        end = jnp.pad(end, ((0, pad_b), (0, 0)))
+        rec = jnp.pad(rec, ((0, pad_b), (0, 0)), constant_values=-1)
+        data = jnp.pad(data, ((0, pad_b), (0, 0), (0, pad_d)))
+        ts = jnp.pad(ts, (0, pad_b))
+        want = jnp.pad(want, (0, pad_b))
+    bp, dp = b + pad_b, d + pad_d
+
+    grid = (bp // bb, dp // dd)
+    vals, found = pl.pallas_call(
+        _resolve_masked_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bb, k, dd), lambda i, j: (i, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dd), lambda i, j: (i, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, dp), data.dtype),
+            jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ts, want, begin, end, rec, data)
     return vals[:b, :d], found[:b]

@@ -13,12 +13,20 @@ from repro.kernels.flash_attention import \
     flash_attention_causal as _flash
 from repro.kernels.mvcc_resolve import default_interpret as _interpret
 from repro.kernels.mvcc_resolve import mvcc_resolve as _resolve
+from repro.kernels.mvcc_resolve import \
+    mvcc_resolve_masked as _resolve_masked
 
 
 def mvcc_resolve(begin, end, data, ts, **kw):
     # interpret auto-selection (backend-driven, explicitly overridable)
     # lives in the kernel itself — pass through untouched
     return _resolve(begin, end, data, ts, **kw)
+
+
+def mvcc_resolve_masked(begin, end, rec, want, data, ts, **kw):
+    # the spill-pool fall-through: shared bucket windows filtered by
+    # owner record id inside the visibility test
+    return _resolve_masked(begin, end, rec, want, data, ts, **kw)
 
 
 def decode_attention(q, k, v, kv_len, **kw):
@@ -32,5 +40,6 @@ def flash_attention_causal(q, k, v, **kw):
 
 
 mvcc_resolve_ref = ref.mvcc_resolve_ref
+mvcc_resolve_masked_ref = ref.mvcc_resolve_masked_ref
 decode_attention_ref = ref.decode_attention_ref
 flash_attention_causal_ref = ref.flash_attention_causal_ref

@@ -21,6 +21,23 @@ def mvcc_resolve_ref(begin: jax.Array, end: jax.Array, data: jax.Array,
     return vals, found
 
 
+def mvcc_resolve_masked_ref(begin: jax.Array, end: jax.Array,
+                            rec: jax.Array, want: jax.Array,
+                            data: jax.Array, ts: jax.Array):
+    """Masked variant over shared (spill-bucket) windows: slot (i, k) is
+    a candidate for read i only when rec[i, k] == want[i]."""
+    vis = (begin <= ts[:, None]) & (ts[:, None] < end) \
+        & (rec == want[:, None])
+    score = jnp.where(vis, begin, NEG_INF)
+    best = jnp.max(score, axis=1)
+    found = best > NEG_INF
+    idx = jnp.argmax(score, axis=1)
+    vals = jnp.take_along_axis(
+        data, idx[:, None, None].repeat(data.shape[-1], -1), axis=1)[:, 0]
+    vals = jnp.where(found[:, None], vals, 0)
+    return vals, found
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array) -> jax.Array:
     """q [B,KvH,G,Dh]; k,v [B,T,KvH,Dh]; kv_len [B] or scalar."""

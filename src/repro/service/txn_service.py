@@ -91,6 +91,7 @@ class _Planned:
     plan: object                    # Plan (device futures)
     ts_base: int
     watermark: int
+    pin_ts: jax.Array               # registered pins at plan time
 
     @property
     def size(self) -> int:
@@ -265,15 +266,20 @@ class TxnService:
                 break        # hold: wait for merge candidates
             tickets, sizes, batch, fp = self._pop_epoch()
             ts_base = eng._ts_next
-            # the watermark the sequential schedule would use for this
-            # epoch, captured at plan time (eng._ts_next == this epoch's
-            # ts base here) so pipelining cannot over-reclaim —
-            # byte-identical GC to the barriered schedule
+            # the watermark (and pin set) the sequential schedule would
+            # use for this epoch, captured at plan time (eng._ts_next ==
+            # this epoch's ts base here) so pipelining cannot over-reclaim
+            # and spill admission sees exactly the sequential pin set —
+            # byte-identical GC to the barriered schedule. Pins created
+            # later land at >= the last planned epoch's final ts, where
+            # they cannot stab anything this epoch evicts, so missing
+            # them is safe (see repro/store/ring.py liveness notes).
             wm = eng.watermark()
+            pins = eng.pin_array()
             plan = eng._plan(batch, jnp.asarray(ts_base, jnp.int32))
             eng._ts_next += batch.size
             self._planned.append(_Planned(tickets, sizes, batch, fp,
-                                          plan, ts_base, wm))
+                                          plan, ts_base, wm, pins))
             self.stats["planned_ahead_max"] = max(
                 self.stats["planned_ahead_max"], len(self._planned))
             progressed = True
@@ -353,7 +359,7 @@ class TxnService:
                   jnp.asarray(e.ts_base + e.size, jnp.int32))
         store, ring_metrics = eng._commit(
             e.plan, e.batch, eng.store, w_data,
-            jnp.asarray(e.watermark, jnp.int32), window)
+            jnp.asarray(e.watermark, jnp.int32), window, e.pin_ts)
         eng.store = store
         metrics = dict(exec_metrics, **ring_metrics)
         eng.record_commit_metrics(metrics)

@@ -1,27 +1,41 @@
 """repro.store — the persistent multiversion storage layer.
 
 ``ring``     single-shard per-record version rings (begin/end/payload
-             slots), watermark GC, the ``commit_versions`` barrier step.
-``sharded``  ``ShardedVersionStore``: the ring record-partitioned over the
-             ``cc`` mesh axis — commit, GC and ``mvcc_resolve`` snapshot
-             reads run per shard with no global store materialisation.
+             slots), watermark GC, the ``commit_versions`` barrier step
+             with pin-precise live/dead eviction accounting and
+             per-record effective capacity (``k_eff``).
+``spill``    the secondary version tier: a bucketed pool shared across
+             records that absorbs LIVE evictions from the primary rings,
+             so snapshot history survives K-ring overflow.
+``policy``   adaptive-K reassignment: grows hot records' primary rings
+             and shrinks cold ones within a fixed slot budget (host-side,
+             runs at GC boundaries).
+``sharded``  ``ShardedVersionStore``: rings + spill record-partitioned
+             over the ``cc`` mesh axis — commit, GC and the two-level
+             ``mvcc_resolve`` snapshot reads run per shard with no global
+             store materialisation.
 
 The engine (``repro.core``) sits on top of this package; the serving KV
 path reaches it through ``BohmEngine.run_readonly_batch``.
 """
+from repro.store.policy import reassign_k
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, init_ring,
-                              ring_occupancy)
+                              pin_stabbed, ring_occupancy)
 from repro.store.sharded import (ShardedVersionStore, commit_sharded,
-                                 gather_windows_sharded, gc_sharded,
-                                 global_record_ids, init_sharded_store,
-                                 resolve_sharded, store_occupancy,
-                                 to_global, unshard)
+                                 from_global, gather_windows_sharded,
+                                 gc_sharded, global_record_ids,
+                                 init_sharded_store, resolve_sharded,
+                                 store_occupancy, to_global, unshard)
+from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
+                               spill_commit, spill_occupancy)
 
 __all__ = [
     "INF_TS", "VersionRing", "commit_versions", "gather_windows",
-    "gc_ring", "init_ring", "ring_occupancy", "ShardedVersionStore",
-    "commit_sharded", "gather_windows_sharded", "gc_sharded",
-    "global_record_ids", "init_sharded_store", "resolve_sharded",
-    "store_occupancy", "to_global", "unshard",
+    "gc_ring", "init_ring", "pin_stabbed", "ring_occupancy",
+    "ShardedVersionStore", "commit_sharded", "from_global",
+    "gather_windows_sharded", "gc_sharded", "global_record_ids",
+    "init_sharded_store", "resolve_sharded", "store_occupancy",
+    "to_global", "unshard", "SpillPool", "gc_spill", "init_spill_pool",
+    "spill_commit", "spill_occupancy", "reassign_k",
 ]

@@ -23,14 +23,25 @@ order-independent, so insertion is pure ring arithmetic: the j-th new
 version of record r in a batch lands in slot (head[r] + j) % K.
 
 Overflow policy (K-bounded): when a record accumulates more than K live
-versions, the ring keeps the NEWEST K and the oldest are overwritten even
-if they sit above the watermark. A snapshot read whose visible version was
-overwritten reports found=False — never a stale payload: every version
-older than the overwritten one has end <= the overwritten version's begin
-<= the reader's ts, so the interval test rejects it. ``overwrote_live``
-counts the pressure globally and ``ring_overwrote_rec`` per record, so a
-hot key outrunning its ring is diagnosable (see
-``BohmEngine.overflow_by_record``).
+versions, the ring keeps the NEWEST K and the oldest are evicted even if
+they sit above the watermark. Eviction liveness is PIN-PRECISE: an
+evicted version is *live* exactly when a registered snapshot pin lands
+inside its [begin, end) window or its end timestamp still reaches future
+readers (``pin_stabbed``); everything else superseded between the lowest
+pin and "now" is dead — no legal reader can ever resolve to it.  Live
+evictions are offered to the secondary spill store (``repro.store.spill``
+— pass ``with_evictees=True`` to collect them); dead ones are discarded
+and counted separately (``ring_overwrote_dead``), so the spill/adaptive-K
+policy reacts only to real history loss.  Without a spill tier a live
+eviction still never yields a stale read: every version older than the
+evicted one has end <= the evicted version's begin <= the reader's ts, so
+the interval test rejects it and the read reports found=False.
+
+Per-record ring capacity is ``k_eff`` (<= K, the physical slot count):
+the adaptive-K policy (``repro.store.policy``) grows hot records' rings
+and shrinks cold ones within a fixed slot budget; insertion is confined
+to slots [0, k_eff) while resolution and GC scan all K slots, so a shrink
+leaves stranded versions readable until the watermark passes them.
 
 Record-partitioned (sharded) rings build on this module — see
 ``repro.store.sharded.ShardedVersionStore``, which runs this commit path
@@ -45,6 +56,18 @@ import jax
 import jax.numpy as jnp
 
 INF_TS = jnp.iinfo(jnp.int32).max
+
+
+def pin_stabbed(begin: jax.Array, end: jax.Array,
+                pin_ts: Optional[jax.Array]) -> jax.Array:
+    """Elementwise: does any registered snapshot pin land inside
+    [begin, end)?  ``pin_ts`` is a [P] i32 array padded with INF_TS (a pad
+    pin never stabs: INF_TS < end is false for every closed version).
+    With ``pin_ts=None`` nothing is stabbed."""
+    if pin_ts is None:
+        return jnp.zeros(jnp.shape(begin), bool)
+    p = pin_ts.reshape((1,) * jnp.ndim(begin) + (-1,))
+    return jnp.any((begin[..., None] <= p) & (p < end[..., None]), axis=-1)
 
 
 @jax.tree_util.register_dataclass
@@ -94,7 +117,10 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
                     w_valid: jax.Array, w_begin_ts: jax.Array,
                     w_end_ts: jax.Array, w_data: jax.Array,
                     watermark: jax.Array,
-                    ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
+                    ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
+                    k_eff: Optional[jax.Array] = None,
+                    pin_ts: Optional[jax.Array] = None,
+                    with_evictees: bool = False
                     ) -> Tuple[VersionRing, Dict[str, jax.Array]]:
     """Batch-barrier ring maintenance: GC conditions 1+2, then commit ALL
     of the batch's versions (not just segment-final ones).
@@ -119,6 +145,15 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
     in place when merged epochs or deferred commits hand the window in
     out of lock-step with the ring's own notion of "now".
 
+    ``k_eff`` [R] bounds each record's insertions to its first k_eff[r]
+    slots (adaptive per-record capacity; default: all K physical slots).
+    ``pin_ts`` [P] (registered snapshot pins, INF_TS-padded) drives the
+    pin-precise live/dead split of evicted versions; without it liveness
+    degrades to the watermark test ``end > watermark`` (the historical
+    over-approximation).  ``with_evictees=True`` additionally returns the
+    evicted versions' (rec, begin, end, payload, live) arrays in the
+    metrics dict under ``evict_*`` keys — the spill store's input.
+
     Record ids must already be LOCAL to this ring (callers with a sharded
     store mask foreign records to INF_TS / valid=False and divide owned
     ids down to the shard-local index before calling).
@@ -128,6 +163,14 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
     if ts_window is not None:
         watermark = jnp.minimum(watermark,
                                 jnp.asarray(ts_window[0], jnp.int32))
+    k_arr = (jnp.full((R,), K, jnp.int32) if k_eff is None
+             else jnp.asarray(k_eff, jnp.int32))
+    # future readers pin at >= ts_hi - 1 (the epoch's last assigned ts):
+    # an evicted version with end above the floor is still reachable.
+    # Without a window the floor degrades to the watermark — the legacy
+    # ``end > watermark`` liveness for bare-ring callers.
+    floor = (jnp.asarray(ts_window[1], jnp.int32) - 1
+             if ts_window is not None else watermark)
 
     # -- 1. precise reclamation below the watermark ------------------------
     live = ring.begin != INF_TS
@@ -144,7 +187,7 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
     end = jnp.where(open_slot & (first_ts != INF_TS)[:, None],
                     first_ts[:, None], end)
 
-    # -- 3. insert the batch's versions (newest K per record) --------------
+    # -- 3. insert the batch's versions (newest k_eff[r] per record) -------
     order = jnp.argsort(w_key, stable=True)        # record-major, pads last
     rec_s = w_rec[order]
     valid_s = w_valid[order]
@@ -157,20 +200,48 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
     count = (right - left).astype(jnp.int32)
     rank = jnp.arange(rec_s.shape[0], dtype=jnp.int32) - left.astype(
         jnp.int32)
-    drop_n = jnp.maximum(count - K, 0)             # overflow: drop oldest
-    keep = valid_s & (rank >= drop_n)
     safe_rec = jnp.clip(rec_s, 0, R - 1)
-    slot = (ring.head[safe_rec] + rank - drop_n) % K
+    k_rec = k_arr[safe_rec]                        # per-record capacity
+    drop_n = jnp.maximum(count - k_rec, 0)         # overflow: drop oldest
+    keep = valid_s & (rank >= drop_n)
+    slot = (ring.head[safe_rec] + rank - drop_n) % k_rec
     flat = jnp.where(keep, safe_rec * K + slot, R * K)   # OOB => dropped
 
-    tgt_begin = begin.reshape(-1)[jnp.minimum(flat, R * K - 1)]
-    tgt_end = end.reshape(-1)[jnp.minimum(flat, R * K - 1)]
-    hit_live = keep & (tgt_begin != INF_TS) & (tgt_end > watermark)
-    overwrote_live = jnp.sum(hit_live)
-    # per-record live-overwrite counts: the K-ring pressure histogram that
-    # makes a hot key outrunning its ring diagnosable (satellite metric)
+    safe_flat = jnp.minimum(flat, R * K - 1)
+    tgt_begin = begin.reshape(-1)[safe_flat]
+    tgt_end = end.reshape(-1)[safe_flat]
+    # liveness of what this insert destroys: pin-precise — a registered
+    # snapshot pin inside [begin, end), or end reaching the future-reader
+    # floor. Versions superseded between the lowest pin and "now" stab no
+    # pin and sit below the floor: DEAD, however far above the watermark
+    # their end is (the old ``end > watermark`` test miscounted those).
+    hit_any = keep & (tgt_begin != INF_TS)
+    tgt_live = (tgt_end > floor) | pin_stabbed(tgt_begin, tgt_end, pin_ts)
+    hit_live = hit_any & tgt_live
+    hit_dead = hit_any & ~tgt_live
+    # per-record live-overwrite counts: the K-ring pressure histogram the
+    # spill/adaptive-K policy consumes; dead overwrites are bookkeeping
+    # noise and are split out so the policy never reacts to them
     overwrote_rec = jnp.zeros((R,), jnp.int32).at[
         jnp.where(hit_live, safe_rec, R)].add(1, mode="drop")
+    overwrote_dead_rec = jnp.zeros((R,), jnp.int32).at[
+        jnp.where(hit_dead, safe_rec, R)].add(1, mode="drop")
+
+    # within-batch overflow drops (never inserted) face the same test
+    dropped = valid_s & ~keep
+    drop_live = dropped & ((end_s > floor) | pin_stabbed(beg_s, end_s,
+                                                         pin_ts))
+
+    if with_evictees:
+        # old contents of the slots this insert destroys, gathered BEFORE
+        # the scatter (targets are distinct, so pre-scatter state is the
+        # pre-batch state) + the live within-batch drops: the spill input.
+        tgt_payload = ring.payload.reshape(R * K, -1)[safe_flat]
+        ev_rec = jnp.concatenate([safe_rec, safe_rec])
+        ev_begin = jnp.concatenate([tgt_begin, beg_s])
+        ev_end = jnp.concatenate([tgt_end, end_s])
+        ev_payload = jnp.concatenate([tgt_payload, data_s])
+        ev_valid = jnp.concatenate([hit_live, drop_live])
 
     begin = begin.reshape(-1).at[flat].set(beg_s, mode="drop").reshape(R, K)
     end = end.reshape(-1).at[flat].set(end_s, mode="drop").reshape(R, K)
@@ -179,18 +250,29 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
 
     inserted = jnp.zeros((R,), jnp.int32).at[
         jnp.where(w_valid, w_rec, R)].add(1, mode="drop")
-    head = (ring.head + jnp.minimum(inserted, K)) % K
+    head = (ring.head + jnp.minimum(inserted, k_arr)) % k_arr
 
     new_ring = VersionRing(begin=begin, end=end, payload=payload, head=head)
     occ = ring_occupancy(new_ring)
     metrics = {
         "ring_evicted": evicted,
-        "ring_overflow_dropped": jnp.sum(valid_s & ~keep),
-        "ring_overwrote_live": overwrote_live,
-        "ring_overwrote_rec": overwrote_rec,
+        "ring_overflow_dropped": jnp.sum(dropped),
+        "ring_overwrote_live": jnp.sum(hit_live) + jnp.sum(drop_live),
+        "ring_overwrote_dead": jnp.sum(hit_dead) + jnp.sum(
+            dropped & ~drop_live),
+        "ring_overwrote_rec": overwrote_rec + jnp.zeros(
+            (R,), jnp.int32).at[jnp.where(drop_live, safe_rec, R)].add(
+            1, mode="drop"),
+        "ring_overwrote_dead_rec": overwrote_dead_rec + jnp.zeros(
+            (R,), jnp.int32).at[jnp.where(dropped & ~drop_live, safe_rec,
+                                          R)].add(1, mode="drop"),
         "ring_occ_max": jnp.max(occ),
         "ring_occ_mean": jnp.mean(occ.astype(jnp.float32)),
     }
+    if with_evictees:
+        metrics.update(evict_rec=ev_rec, evict_begin=ev_begin,
+                       evict_end=ev_end, evict_payload=ev_payload,
+                       evict_valid=ev_valid)
     return new_ring, metrics
 
 

@@ -10,18 +10,24 @@ all run per shard without ever materialising a global [R, K] store:
     the records it owns and runs the single-ring ``commit_versions`` on
     its local ring — zero cross-shard communication (commit order inside
     a record segment is a per-record property, and every record has
-    exactly one owner);
+    exactly one owner). When the store carries a spill tier, each shard
+    feeds its own live evictees straight into its local spill pool
+    (``repro.store.spill``) inside the same per-shard body;
   * ``resolve_sharded``  each shard gathers candidate windows for the
     reads it owns and resolves visibility through the ``mvcc_resolve``
-    Pallas kernel; per-read results merge by ownership (each read has
-    exactly one owner, others contribute zeros);
+    Pallas kernel, falling through primary -> spill (the masked kernel
+    filters the shared spill buckets by record id); per-read results
+    merge by ownership (each read has exactly one owner, others
+    contribute zeros);
   * GC is watermark-driven per shard — the watermark is a global scalar,
-    so reclamation decisions are embarrassingly parallel.
+    so reclamation decisions (rings AND spill) are embarrassingly
+    parallel.
 
 Two mapping substrates share one per-shard body:
 
   * ``mesh`` given (a ``cc`` axis with n devices): ``shard_map`` — each
-    device holds one shard's ring arrays and commits/resolves locally;
+    device holds one shard's ring + spill arrays and commits/resolves
+    locally;
   * no mesh: logical shards on one device (vmap for commit, an unrolled
     loop of kernel calls for resolve) — the layout and arithmetic are
     identical, so sharded state is bit-equal across substrates.
@@ -40,19 +46,31 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, ring_occupancy)
+from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
+                               spill_buckets_for, spill_commit)
 
 PAD_KEY = jnp.uint32(0xFFFFFFFF)
+
+_EVICT_KEYS = ("evict_rec", "evict_begin", "evict_end", "evict_payload",
+               "evict_valid")
 
 
 @dataclasses.dataclass(frozen=True)
 class ShardedVersionStore:
-    """Version rings stacked over a leading shard axis.
+    """Version rings + spill pools stacked over a leading shard axis.
 
     ``rings`` arrays carry shapes [n, R_local, ...] where
     ``R_local = ceil(num_records / n)``; records past ``num_records``
     (hash-padding) hold empty rings and are never read or written.
+    ``spill`` (optional) holds each shard's secondary version pool —
+    live evictions from the primary rings land there and the resolve
+    path falls through to it. ``k_eff`` [n, R_local] is each record's
+    effective primary-ring capacity (adaptive K; <= the physical slot
+    count, insertion-only — resolution and GC always scan all slots).
     """
     rings: VersionRing       # stacked: begin/end [n, Rl, K], head [n, Rl]
+    spill: Optional[SpillPool]   # stacked [n, B, S, ...] or None
+    k_eff: jax.Array         # [n, Rl] i32 per-record ring capacity
     num_records: int         # global record count (static)
 
     @property
@@ -69,7 +87,8 @@ class ShardedVersionStore:
 
 
 jax.tree_util.register_dataclass(
-    ShardedVersionStore, data_fields=("rings",), meta_fields=("num_records",))
+    ShardedVersionStore, data_fields=("rings", "spill", "k_eff"),
+    meta_fields=("num_records",))
 
 
 def _ring0(store: ShardedVersionStore) -> VersionRing:
@@ -81,11 +100,23 @@ def _take_shard(store: ShardedVersionStore, s: int) -> VersionRing:
     return jax.tree.map(lambda x: x[s], store.rings)
 
 
+def _take_spill(store: ShardedVersionStore, s) -> Optional[SpillPool]:
+    if store.spill is None:
+        return None
+    return jax.tree.map(lambda x: x[s], store.spill)
+
+
 def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
                        num_slots: int = 4,
-                       n_shards: int = 1) -> ShardedVersionStore:
+                       n_shards: int = 1,
+                       spill_buckets: int = 0,
+                       spill_slots: int = 0,
+                       k_init: Optional[int] = None) -> ShardedVersionStore:
     """Store whose slot 0 holds the initial open version of every record,
-    hash-partitioned into ``n_shards`` rings."""
+    hash-partitioned into ``n_shards`` rings.  ``spill_buckets`` x
+    ``spill_slots`` > 0 attaches a per-shard spill pool; ``k_init`` caps
+    each record's effective ring capacity below the physical
+    ``num_slots`` (the adaptive-K starting point)."""
     R, D = base.shape
     if base_ts is None:
         base_ts = jnp.zeros((R,), jnp.int32)
@@ -105,8 +136,16 @@ def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
     payload = payload.at[:, :, 0, :].set(
         jnp.where(real[..., None], base_sh, 0))
     head = jnp.full((n, Rl), 1 % num_slots, jnp.int32)
+    spill = None
+    if int(spill_buckets) > 0 and int(spill_slots) > 0:
+        pool = init_spill_pool(spill_buckets, spill_slots, D, basep.dtype)
+        spill = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), pool)
+    k0 = num_slots if k_init is None else min(int(k_init), num_slots)
     return ShardedVersionStore(
         rings=VersionRing(begin=begin, end=end, payload=payload, head=head),
+        spill=spill,
+        k_eff=jnp.full((n, Rl), k0, jnp.int32),
         num_records=R)
 
 
@@ -136,13 +175,27 @@ def to_global(store: ShardedVersionStore, per_shard: jax.Array) -> jax.Array:
         (Rl * n,) + per_shard.shape[2:])[:store.num_records]
 
 
+def from_global(store: ShardedVersionStore, per_record: jax.Array,
+                pad_value: int = 0) -> jax.Array:
+    """Inverse of ``to_global``: scatter a global [R] record statistic
+    into the sharded [n, Rl] layout (hash-padding records get
+    ``pad_value``)."""
+    n, Rl = store.n_shards, store.records_per_shard
+    per_record = jnp.asarray(per_record)
+    pad = Rl * n - store.num_records
+    padded = jnp.pad(per_record, [(0, pad)] + [(0, 0)] * (
+        per_record.ndim - 1), constant_values=pad_value)
+    return jnp.moveaxis(padded.reshape((Rl, n) + per_record.shape[1:]),
+                        0, 1)
+
+
 def store_occupancy(store: ShardedVersionStore) -> jax.Array:
     """[R] live version count per global record."""
     return to_global(store, ring_occupancy(store.rings))
 
 
 # ---------------------------------------------------------------------------
-# Commit: per-shard ring maintenance (GC + insert), no communication.
+# Commit: per-shard ring maintenance (GC + insert + spill), no communication.
 # ---------------------------------------------------------------------------
 def _mask_to_shard(n: int, shard, w_rec, w_key, w_valid):
     """Project global placeholder arrays onto one shard: foreign records
@@ -156,73 +209,117 @@ def _mask_to_shard(n: int, shard, w_rec, w_key, w_valid):
     return rec_l, key_l, owned
 
 
+def _commit_one_shard(ring_s: VersionRing, spill_s: Optional[SpillPool],
+                      k_eff_s: jax.Array, rec_l, key_l, owned, w_begin_ts,
+                      w_end_ts, w_data, watermark, ts_window, pin_ts):
+    """One shard's full commit: primary ring maintenance, then its live
+    evictees into the local spill pool (same clamped watermark)."""
+    with_spill = spill_s is not None
+    ring_o, m = commit_versions(ring_s, rec_l, key_l, owned, w_begin_ts,
+                                w_end_ts, w_data, watermark,
+                                ts_window=ts_window, k_eff=k_eff_s,
+                                pin_ts=pin_ts, with_evictees=with_spill)
+    if with_spill:
+        ev = {k: m.pop(k) for k in _EVICT_KEYS}
+        wm = jnp.asarray(watermark, jnp.int32)
+        if ts_window is not None:
+            wm = jnp.minimum(wm, jnp.asarray(ts_window[0], jnp.int32))
+        spill_s, sm = spill_commit(spill_s, ev["evict_rec"],
+                                   ev["evict_begin"], ev["evict_end"],
+                                   ev["evict_payload"], ev["evict_valid"],
+                                   wm, pin_ts=pin_ts)
+        m.update(sm)
+    return ring_o, spill_s, m
+
+
 def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
                    w_key: jax.Array, w_valid: jax.Array,
                    w_begin_ts: jax.Array, w_end_ts: jax.Array,
                    w_data: jax.Array, watermark: jax.Array,
                    mesh=None, axis: str = "cc",
-                   ts_window: Optional[Tuple[jax.Array, jax.Array]] = None
+                   ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
+                   pin_ts: Optional[jax.Array] = None
                    ) -> Tuple[ShardedVersionStore, Dict[str, jax.Array]]:
-    """Commit ALL batch versions into the partitioned rings.
+    """Commit ALL batch versions into the partitioned rings (and live
+    evictees into the spill pools).
 
     Inputs are the merged plan's global placeholder arrays (identical on
     every shard); each shard commits only the records it owns. Metrics are
     aggregated to match the single-ring ``commit_versions`` contract,
-    except ``ring_overwrote_rec`` which stays per-shard [n, Rl] (use
-    ``to_global`` for the [R] view). ``ts_window`` (the epoch's global
-    timestamp span — see ``commit_versions``) is a global scalar pair, so
-    it replicates to every shard unchanged.
+    except ``ring_overwrote_rec`` / ``ring_overwrote_dead_rec`` which stay
+    per-shard [n, Rl] (use ``to_global`` for the [R] view). ``ts_window``
+    (the epoch's global timestamp span — see ``commit_versions``) and
+    ``pin_ts`` (registered snapshot pins, INF_TS-padded) are global
+    scalars/vectors, so they replicate to every shard unchanged.
     """
     n = store.n_shards
+    with_spill = store.spill is not None
     if n == 1:
-        ring, metrics = commit_versions(_ring0(store), w_rec, w_key,
-                                        w_valid, w_begin_ts, w_end_ts,
-                                        w_data, watermark,
-                                        ts_window=ts_window)
-        metrics["ring_overwrote_rec"] = metrics["ring_overwrote_rec"][None]
+        ring, spill0, metrics = _commit_one_shard(
+            _ring0(store), _take_spill(store, 0), store.k_eff[0],
+            w_rec, w_key, w_valid, w_begin_ts, w_end_ts, w_data,
+            watermark, ts_window, pin_ts)
+        for k in ("ring_overwrote_rec", "ring_overwrote_dead_rec"):
+            metrics[k] = metrics[k][None]
+        new_spill = None if spill0 is None else jax.tree.map(
+            lambda x: x[None], spill0)
         return dataclasses.replace(
-            store, rings=jax.tree.map(lambda x: x[None], ring)), metrics
+            store, rings=jax.tree.map(lambda x: x[None], ring),
+            spill=new_spill), metrics
 
-    def one_shard(ring_s: VersionRing, shard):
+    def one_shard(ring_s: VersionRing, spill_s, k_eff_s, shard):
         rec_l, key_l, owned = _mask_to_shard(n, shard, w_rec, w_key,
                                              w_valid)
-        return commit_versions(ring_s, rec_l, key_l, owned, w_begin_ts,
-                               w_end_ts, w_data, watermark,
-                               ts_window=ts_window)
+        return _commit_one_shard(ring_s, spill_s, k_eff_s, rec_l, key_l,
+                                 owned, w_begin_ts, w_end_ts, w_data,
+                                 watermark, ts_window, pin_ts)
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
 
-        def body(begin, end, payload, head):
-            ring_s = VersionRing(begin=begin[0], end=end[0],
-                                 payload=payload[0], head=head[0])
-            ring_o, m = one_shard(ring_s, jax.lax.axis_index(axis))
-            return jax.tree.map(lambda x: x[None], (ring_o, m))
+        def body(rings, spill, k_eff):
+            squeeze = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
+            ring_o, spill_o, m = one_shard(squeeze(rings),
+                                           None if spill is None
+                                           else squeeze(spill),
+                                           k_eff[0],
+                                           jax.lax.axis_index(axis))
+            return jax.tree.map(lambda x: x[None], (ring_o, spill_o, m))
 
-        rings, per = _shard_map(
+        out_struct = (_ring_struct(),
+                      None if not with_spill else _spill_struct(),
+                      _metrics_struct(with_spill))
+        rings, spill, per = _shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis), P(axis), P(axis), P(axis)),
-            out_specs=jax.tree.map(lambda _: P(axis), (
-                _ring_struct(), _metrics_struct())))(
-            store.rings.begin, store.rings.end, store.rings.payload,
-            store.rings.head)
+            in_specs=jax.tree.map(lambda _: P(axis),
+                                  (store.rings, store.spill, store.k_eff)),
+            out_specs=jax.tree.map(lambda _: P(axis), out_struct))(
+            store.rings, store.spill, store.k_eff)
     else:
-        rings, per = jax.vmap(one_shard)(
-            store.rings, jnp.arange(n, dtype=jnp.int32))
+        rings, spill, per = jax.vmap(one_shard)(
+            store.rings, store.spill, store.k_eff,
+            jnp.arange(n, dtype=jnp.int32))
 
     R = store.num_records
     metrics = {
         "ring_evicted": jnp.sum(per["ring_evicted"]),
         "ring_overflow_dropped": jnp.sum(per["ring_overflow_dropped"]),
         "ring_overwrote_live": jnp.sum(per["ring_overwrote_live"]),
+        "ring_overwrote_dead": jnp.sum(per["ring_overwrote_dead"]),
         "ring_overwrote_rec": per["ring_overwrote_rec"],        # [n, Rl]
+        "ring_overwrote_dead_rec": per["ring_overwrote_dead_rec"],
         "ring_occ_max": jnp.max(per["ring_occ_max"]),
         # per-shard means weight hash-padding records with 0 occupancy;
         # renormalise to the real record count
         "ring_occ_mean": jnp.sum(per["ring_occ_mean"])
         * store.records_per_shard / R,
     }
-    return dataclasses.replace(store, rings=rings), metrics
+    if with_spill:
+        for k in ("spill_freed", "spill_admitted", "spill_dropped",
+                  "spill_overwrote", "spill_overwrote_pinned",
+                  "spill_occupancy"):
+            metrics[k] = jnp.sum(per[k])
+    return dataclasses.replace(store, rings=rings, spill=spill), metrics
 
 
 def _ring_struct():
@@ -230,31 +327,49 @@ def _ring_struct():
     return VersionRing(begin=z, end=z, payload=z, head=z)
 
 
-def _metrics_struct():
+def _spill_struct():
     z = jnp.zeros((), jnp.int32)
-    return {"ring_evicted": z, "ring_overflow_dropped": z,
-            "ring_overwrote_live": z, "ring_overwrote_rec": z,
-            "ring_occ_max": z, "ring_occ_mean": z}
+    return SpillPool(begin=z, end=z, rec=z, payload=z)
+
+
+def _metrics_struct(with_spill: bool = False):
+    z = jnp.zeros((), jnp.int32)
+    m = {"ring_evicted": z, "ring_overflow_dropped": z,
+         "ring_overwrote_live": z, "ring_overwrote_dead": z,
+         "ring_overwrote_rec": z, "ring_overwrote_dead_rec": z,
+         "ring_occ_max": z, "ring_occ_mean": z}
+    if with_spill:
+        m.update({"spill_freed": z, "spill_admitted": z,
+                  "spill_dropped": z, "spill_overwrote": z,
+                  "spill_overwrote_pinned": z, "spill_occupancy": z})
+    return m
 
 
 def gc_sharded(store: ShardedVersionStore, watermark: jax.Array
                ) -> Tuple[ShardedVersionStore, jax.Array]:
-    """Standalone watermark GC sweep over every shard (see ``gc_ring``).
-    The condition ``end <= watermark`` is per-slot elementwise with a
-    global scalar watermark, so the same expression runs unchanged over
-    the stacked [n, Rl, K] arrays on ANY substrate — mesh-sharded device
-    arrays, vmapped logical shards, or the single ring."""
+    """Standalone watermark GC sweep over every shard (see ``gc_ring`` /
+    ``gc_spill``).  The condition ``end <= watermark`` is per-slot
+    elementwise with a global scalar watermark, so the same expression
+    runs unchanged over the stacked [n, Rl, K] (and [n, B, S]) arrays on
+    ANY substrate — mesh-sharded device arrays, vmapped logical shards,
+    or the single ring."""
     rings, evicted = gc_ring(store.rings, watermark)
-    return dataclasses.replace(store, rings=rings), evicted
+    spill = store.spill
+    if spill is not None:
+        spill, freed = gc_spill(spill, watermark)
+        evicted = evicted + freed
+    return dataclasses.replace(store, rings=rings, spill=spill), evicted
 
 
 # ---------------------------------------------------------------------------
-# Snapshot reads: per-shard gather + mvcc_resolve, merged by ownership.
+# Snapshot reads: per-shard gather + mvcc_resolve (primary, then the spill
+# fall-through), merged by ownership.
 # ---------------------------------------------------------------------------
 def gather_windows_sharded(store: ShardedVersionStore, records: jax.Array
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(begin [B, K], end [B, K], payload [B, K, D]) candidate windows per
-    read, gathered from each record's owning shard."""
+    read, gathered from each record's owning shard (primary rings only —
+    the spill fall-through lives in ``resolve_sharded``)."""
     if store.n_shards == 1:
         return gather_windows(_ring0(store), records)
     n = store.n_shards
@@ -264,47 +379,68 @@ def gather_windows_sharded(store: ShardedVersionStore, records: jax.Array
     return r.begin[shard, loc], r.end[shard, loc], r.payload[shard, loc]
 
 
+def _resolve_two_level(ring_s: VersionRing, spill_s: Optional[SpillPool],
+                       local_rec: jax.Array, ts: jax.Array,
+                       interpret: Optional[bool]
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Primary-ring resolve with the spill fall-through: at most one of
+    the two levels holds the version visible at ``ts`` (a version is
+    evicted from the ring exactly when it moves to spill, and [begin, end)
+    windows partition a record's timeline), so combining is a select."""
+    begin, end, payload = gather_windows(ring_s, local_rec)
+    vals, found = ops.mvcc_resolve(begin, end, payload, ts,
+                                   interpret=interpret)
+    if spill_s is None:
+        return vals, found
+    bkt = spill_buckets_for(local_rec, spill_s.begin.shape[0])
+    s_vals, s_found = ops.mvcc_resolve_masked(
+        spill_s.begin[bkt], spill_s.end[bkt], spill_s.rec[bkt],
+        local_rec, spill_s.payload[bkt], ts, interpret=interpret)
+    return jnp.where(found[:, None], vals, s_vals), found | s_found
+
+
 def resolve_sharded(store: ShardedVersionStore, records: jax.Array,
                     ts: jax.Array, mesh=None, axis: str = "cc",
                     interpret: Optional[bool] = None
                     ) -> Tuple[jax.Array, jax.Array]:
     """Resolve ``records`` [B] at snapshot timestamps ``ts`` [B] through
     the Pallas kernel, PER SHARD: each shard runs ``mvcc_resolve`` over
-    the reads it owns against its local ring; per-read results merge by
-    ownership (foreign shards contribute zeros / found=False). Returns
-    (vals [B, D], found [B])."""
+    the reads it owns against its local ring, falling through to its
+    spill pool for versions the primary ring evicted; per-read results
+    merge by ownership (foreign shards contribute zeros / found=False).
+    Returns (vals [B, D], found [B])."""
     n = store.n_shards
     records = jnp.asarray(records, jnp.int32)
     if n == 1:
-        begin, end, payload = gather_windows(_ring0(store), records)
-        return ops.mvcc_resolve(begin, end, payload, ts,
-                                interpret=interpret)
+        local = jnp.maximum(records, 0)
+        return _resolve_two_level(_ring0(store), _take_spill(store, 0),
+                                  local, ts, interpret)
 
-    def one_shard(ring_s: VersionRing, shard):
+    def one_shard(ring_s: VersionRing, spill_s, shard):
         owned = (records % n) == shard
         local = jnp.where(owned, records // n, 0)
-        begin, end, payload = gather_windows(ring_s, local)
-        vals, found = ops.mvcc_resolve(begin, end, payload, ts,
-                                       interpret=interpret)
+        vals, found = _resolve_two_level(ring_s, spill_s, local, ts,
+                                         interpret)
         return jnp.where(owned[:, None], vals, 0), owned & found
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
 
-        def body(begin, end, payload, head):
-            ring_s = VersionRing(begin=begin[0], end=end[0],
-                                 payload=payload[0], head=head[0])
-            vals, found = one_shard(ring_s, jax.lax.axis_index(axis))
+        def body(rings, spill):
+            squeeze = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
+            vals, found = one_shard(squeeze(rings),
+                                    None if spill is None
+                                    else squeeze(spill),
+                                    jax.lax.axis_index(axis))
             # each read is owned by exactly one shard: sum == select
             return (jax.lax.psum(vals, axis),
                     jax.lax.psum(found.astype(jnp.int32), axis) > 0)
 
         return _shard_map(
             body, mesh=mesh,
-            in_specs=(P(axis),) * 4,
-            out_specs=(P(), P()))(
-            store.rings.begin, store.rings.end, store.rings.payload,
-            store.rings.head)
+            in_specs=jax.tree.map(lambda _: P(axis),
+                                  (store.rings, store.spill)),
+            out_specs=(P(), P()))(store.rings, store.spill)
 
     # logical shards on one device: unrolled kernel calls (n is static),
     # merged by ownership — XLA schedules the independent shard resolves
@@ -312,7 +448,8 @@ def resolve_sharded(store: ShardedVersionStore, records: jax.Array,
     vals = None
     found = None
     for s in range(n):
-        v_s, f_s = one_shard(_take_shard(store, s), jnp.int32(s))
+        v_s, f_s = one_shard(_take_shard(store, s), _take_spill(store, s),
+                             jnp.int32(s))
         vals = v_s if vals is None else vals + v_s
         found = f_s if found is None else found | f_s
     return vals, found

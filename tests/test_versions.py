@@ -139,15 +139,17 @@ def test_gc_retains_above_watermark_and_reclaims_after_release():
 
 def test_ring_overflow_reports_not_found_never_stale():
     """When a hot record exceeds K live versions (pinned reader far in the
-    past), the oldest fall off the ring: the historical read reports
-    found=False with a zero payload — it must never return a newer or
-    stale payload as if it were the snapshot's."""
+    past) and there is NO spill tier, the oldest fall off the ring: the
+    historical read reports found=False with a zero payload — it must
+    never return a newer or stale payload as if it were the snapshot's.
+    (With the default spill tier the same read returns the real version —
+    see tests/test_spill.py.)"""
     def bump(vals, args):
         return vals.at[..., 0].add(1), jnp.zeros((), bool)
 
     wl = Workload(name="hot", n_read=1, n_write=1, payload_words=1,
                   branches=(bump,))
-    eng = BohmEngine(4, wl, ring_slots=2)
+    eng = BohmEngine(4, wl, ring_slots=2, spill_slots=0)
     hot = make_batch(np.zeros((8, 1)), np.zeros((8, 1)),
                      np.zeros(8), np.zeros((8, 1)))
     eng.run_batch(hot)
