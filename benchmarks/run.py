@@ -14,6 +14,9 @@
   spill       hierarchical version storage: fixed-K drop vs spill vs
               adaptive-K on a pinned hot-set update stream (found-rate
               for historical reads + txn/s at equal memory budget)
+  paged       paged physical storage: page slab vs dense rings on the
+              same stream — found-rate per word of physical memory,
+              slab occupancy, the paged commit tax
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
 
@@ -76,6 +79,11 @@ def bench_spill(quick: bool = False):
     spill.run(quick)
 
 
+def bench_paged(quick: bool = False):
+    from benchmarks import paged
+    paged.run(quick)
+
+
 def bench_kernels():
     from benchmarks import kernels
     kernels.run()
@@ -93,7 +101,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
                          "smallbank,snapshot,pipeline,admission,spill,"
-                         "kernels,serving")
+                         "paged,kernels,serving")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -121,6 +129,9 @@ def main() -> None:
     if want("spill"):
         print("== spill (hierarchical version storage) ==", flush=True)
         bench_spill(args.quick)
+    if want("paged"):
+        print("== paged (page-slab physical storage) ==", flush=True)
+        bench_paged(args.quick)
     if want("kernels"):
         print("== kernels ==", flush=True)
         bench_kernels()

@@ -1,5 +1,14 @@
-"""Generate the EXPERIMENTS.md optimized-vs-baseline roofline summary from
-the dry-run artifacts.
+"""Summarise benchmark artifacts into one markdown report.
+
+Two sections, each emitted only when its artifacts exist under
+``benchmarks/results/``:
+
+  * the MVCC benchmark tables — the JSON twins written by
+    ``benchmarks.run`` (pipeline, admission, spill, paged): scheduler
+    wins and storage found-rate/footprint trades, selected columns per
+    benchmark;
+  * the EXPERIMENTS.md optimized-vs-baseline roofline summary from the
+    dry-run artifacts (unchanged from the original tool).
 
     PYTHONPATH=src python -m benchmarks.summarize
 """
@@ -13,6 +22,56 @@ import numpy as np
 from repro.launch.roofline import analyze_cell
 
 RESULTS = Path(__file__).resolve().parent / "results"
+
+# benchmark name -> (title, ordered columns to surface; None = all)
+BENCH_TABLES = {
+    "pipeline": ("pipeline — pipelined vs barriered (Fig 3 overlap)",
+                 ["n_shards", "mode", "substrate", "txn_s",
+                  "pipelined_over_barriered"]),
+    "admission": ("admission — conflict-aware scheduler vs barriered",
+                  ["stream", "mode", "admission_window", "txn_s",
+                   "vs_barriered", "merged_batches", "overlapped_execs"]),
+    "spill": ("spill — hierarchical storage found-rate at equal budget",
+              ["config", "found_rate", "found_vs_drop", "txn_s",
+               "txn_s_vs_drop", "spill_admitted", "spill_dropped",
+               "k_min_eff", "k_max_eff"]),
+    "paged": ("paged — page slab vs dense rings, found-rate per word",
+              ["config", "phys_slots", "phys_kwords", "found_rate",
+               "found_vs_budget", "txn_s", "txn_s_vs_budget",
+               "pages_mapped", "pages_free", "alloc_failed"]),
+}
+
+
+def bench_rows(name: str):
+    path = RESULTS / f"{name}.json"
+    if not path.exists():
+        return None
+    rows = json.loads(path.read_text())
+    return rows if isinstance(rows, list) and rows else None
+
+
+def print_bench_tables() -> bool:
+    """The MVCC benchmark section; returns True when anything printed."""
+    printed = False
+    for name, (title, columns) in BENCH_TABLES.items():
+        rows = bench_rows(name)
+        if rows is None:
+            continue
+        cols = [c for c in (columns or list(rows[0].keys()))
+                if any(c in r for r in rows)]
+        if not cols:
+            continue
+        print(f"\n### {title}\n")
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for r in rows:
+            print("| " + " | ".join(str(r.get(c, "")) for c in cols)
+                  + " |")
+        printed = True
+    if not printed:
+        print("(no benchmark JSON twins under benchmarks/results/ — "
+              "run `python -m benchmarks.run` first)")
+    return printed
 
 
 def rows_from(path: Path, mesh: str):
@@ -33,8 +92,16 @@ def gmean(xs):
 
 
 def main():
-    base = rows_from(RESULTS / "dryrun_baseline.json", "single")
-    opt = rows_from(RESULTS / "dryrun_opt.json", "single")
+    print("## MVCC benchmarks (JSON twins)")
+    print_bench_tables()
+
+    base_path = RESULTS / "dryrun_baseline.json"
+    opt_path = RESULTS / "dryrun_opt.json"
+    if not (base_path.exists() and opt_path.exists()):
+        return            # no roofline artifacts — benchmark tables only
+    print("\n## Roofline (dry-run artifacts)\n")
+    base = rows_from(base_path, "single")
+    opt = rows_from(opt_path, "single")
     keys = sorted(set(base) & set(opt))
 
     def agg(rows, field, keys_):

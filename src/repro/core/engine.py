@@ -49,9 +49,9 @@ from repro.core.execute import (Store, commit, execute_plan, init_store,
                                 store_from_base)
 from repro.core.plan import MAX_BATCH_TXNS, Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
-from repro.store import (INF_TS, from_global, gather_windows_sharded,
-                         gc_sharded, reassign_k, resolve_sharded,
-                         store_occupancy, to_global)
+from repro.store import (INF_TS, decay_pressure, from_global,
+                         gather_windows_sharded, gc_sharded, reassign_k,
+                         resolve_sharded, store_occupancy, to_global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,7 +69,11 @@ class BohmEngine:
                  spill_buckets: Optional[int] = None,
                  spill_slots: int = 8,
                  adaptive_k: bool = False, k_min: int = 1,
-                 k_max: Optional[int] = None):
+                 k_max: Optional[int] = None,
+                 paged: bool = False, page_slots: int = 4,
+                 pages_per_shard: Optional[int] = None,
+                 pressure_decay: Optional[float] = None,
+                 k_quantum: Optional[int] = None):
         """``spill_slots`` > 0 (default 8) attaches a per-shard spill pool
         of ``spill_buckets`` x ``spill_slots`` slots (default: one bucket
         per 4 local records) — live K-ring evictions land there instead
@@ -79,7 +83,27 @@ class BohmEngine:
         (default 2x ``ring_slots``) but caps every record at ``ring_slots``
         effective slots, then lets ``gc_sweep`` move capacity from cold
         records to hot ones within the fixed budget R x ``ring_slots``
-        (see repro/store/policy.py)."""
+        (see repro/store/policy.py).
+
+        ``paged=True`` swaps the dense [R, k_max] rings for the paged
+        slab (``repro.store.pages``): ``pages_per_shard`` pages of
+        ``page_slots`` slots per shard (default: ``ceil(ring_slots /
+        page_slots)`` pages per record, so every record can physically
+        reach its initial capacity), per-record page tables, and
+        reads through the fused ``mvcc_resolve_paged`` kernel. Logical
+        semantics are the dense ring's; physically a cold record holds
+        one page instead of ``k_max`` slots and capacity moves at page
+        granularity (``reassign_k`` quantum = ``page_slots``, so
+        adaptive paged stores require ``ring_slots`` and ``k_max`` to be
+        page multiples). ``storage_stats()`` reports the footprint.
+
+        ``pressure_decay`` (sweeps, optional) applies an EWMA half-life
+        to the adaptive-K pressure input so a migrated hot set's old
+        records cool to donors instead of holding their peak grant
+        forever; None keeps the raw cumulative histogram. ``k_quantum``
+        overrides the policy quantum (default: ``page_slots`` when
+        paged, else 1) — the dense twin of a paged store in equivalence
+        tests runs the same page-granular policy."""
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
@@ -97,11 +121,31 @@ class BohmEngine:
         if not 1 <= self.k_min <= ring_slots:
             raise ValueError("k_min must be in [1, ring_slots] (k_eff "
                              "starts at ring_slots)")
+        self.paged = bool(paged)
+        self.page_slots = int(page_slots) if self.paged else 0
+        self.k_quantum = int(k_quantum) if k_quantum is not None else (
+            self.page_slots if self.paged else 1)
+        if self.adaptive_k and self.k_quantum > 1:
+            if ring_slots % self.k_quantum or self.k_max % self.k_quantum:
+                raise ValueError(
+                    "page-quantized adaptive K requires ring_slots and "
+                    "k_max to be multiples of the quantum (page_slots)")
+        self.pressure_decay = (float(pressure_decay)
+                               if pressure_decay is not None else None)
         if n_shards is None:
             n_shards = mesh.shape[cc_axis] if (
                 mesh is not None and cc_axis in mesh.shape) else 1
         self.n_shards = int(n_shards)
         records_local = -(-num_records // self.n_shards)
+        self.pages_per_shard = 0
+        if self.paged:
+            # default: every record can physically reach its initial
+            # k_eff — ceil(ring_slots / S) pages each (for page-multiple
+            # capacities this IS the slot budget in pages); callers
+            # shrink it explicitly to trade found-rate for memory
+            self.pages_per_shard = int(
+                pages_per_shard if pages_per_shard is not None
+                else records_local * -(-ring_slots // self.page_slots))
         self.spill_slots = int(spill_slots)
         self.spill_buckets = int(spill_buckets if spill_buckets is not None
                                  else max(1, records_local // 4)
@@ -113,18 +157,26 @@ class BohmEngine:
                                 n_shards=self.n_shards,
                                 spill_buckets=self.spill_buckets,
                                 spill_slots=self.spill_slots,
-                                k_init=ring_slots)
+                                k_init=ring_slots, paged=self.paged,
+                                page_slots=self.page_slots or 4,
+                                pages_per_shard=self.pages_per_shard
+                                or None)
         self._ts_next = 1                  # host mirror of store.ts_counter
         self._snapshots: Dict[int, SnapshotHandle] = {}
         self._next_sid = 0
-        self._overflow = jnp.zeros_like(self.store.versions.rings.head)
-        self._overflow_dead = jnp.zeros_like(self.store.versions.rings.head)
+        self._overflow = jnp.zeros_like(self.store.versions.k_eff)
+        self._overflow_dead = jnp.zeros_like(self.store.versions.k_eff)
         self._spill_totals = {"spill_admitted": 0, "spill_dropped": 0,
                               "spill_overwrote_pinned": 0}
+        self._paged_alloc_failed = 0       # accumulated as device scalars
         # adaptive-K hysteresis: a record donates capacity only after
         # sitting idle across two consecutive policy passes
         self._stable_idle = np.zeros((num_records,), bool)
         self._commits_since_sweep = 0
+        # EWMA pressure state (pressure_decay): decayed accumulator +
+        # the cumulative histogram at the last sweep (for deltas)
+        self._pressure_ewma = np.zeros((num_records,), np.float64)
+        self._overflow_at_sweep = np.zeros((num_records,), np.int64)
         self._step = jax.jit(functools.partial(
             _bohm_step, workload=workload, mesh=mesh, cc_axis=cc_axis))
         self._plan = jax.jit(functools.partial(
@@ -191,14 +243,21 @@ class BohmEngine:
                                      self.n_shards,
                                      spill_buckets=self.spill_buckets,
                                      spill_slots=self.spill_slots,
-                                     k_init=self.ring_slots)
+                                     k_init=self.ring_slots,
+                                     paged=self.paged,
+                                     page_slots=self.page_slots or 4,
+                                     pages_per_shard=self.pages_per_shard
+                                     or None)
         self._ts_next = 1
         self._snapshots.clear()
-        self._overflow = jnp.zeros_like(self.store.versions.rings.head)
-        self._overflow_dead = jnp.zeros_like(self.store.versions.rings.head)
+        self._overflow = jnp.zeros_like(self.store.versions.k_eff)
+        self._overflow_dead = jnp.zeros_like(self.store.versions.k_eff)
         self._spill_totals = {k: 0 for k in self._spill_totals}
+        self._paged_alloc_failed = 0
         self._stable_idle = np.zeros((self.num_records,), bool)
         self._commits_since_sweep = 0
+        self._pressure_ewma = np.zeros((self.num_records,), np.float64)
+        self._overflow_at_sweep = np.zeros((self.num_records,), np.int64)
 
     # -- snapshot-read path (zero CC bookkeeping) --------------------------
     def current_ts(self) -> int:
@@ -258,7 +317,21 @@ class BohmEngine:
         # pressure/occupancy inputs are unchanged and rerunning the pass
         # (or advancing the idle streak) would break byte-idempotence
         if self.adaptive_k and self._commits_since_sweep > 0:
-            pressure = np.asarray(to_global(versions, self._overflow))
+            cumulative = np.asarray(to_global(versions, self._overflow),
+                                    np.int64)
+            if self.pressure_decay is None:
+                pressure = cumulative
+            else:
+                # EWMA over per-sweep deltas: a cooled record's pressure
+                # halves every ``pressure_decay`` sweeps and eventually
+                # truncates to zero — it becomes a donor and its
+                # capacity (pages) flows to the new hot set
+                self._pressure_ewma = decay_pressure(
+                    self._pressure_ewma,
+                    cumulative - self._overflow_at_sweep,
+                    self.pressure_decay)
+                self._overflow_at_sweep = cumulative
+                pressure = self._pressure_ewma
             k_glob = np.asarray(to_global(versions, versions.k_eff))
             occ = np.asarray(store_occupancy(versions))
             idle = occ <= 1
@@ -266,17 +339,24 @@ class BohmEngine:
                                k_max=self.k_max, k_base=self.ring_slots,
                                occupancy=occ,
                                stable_idle=idle & self._stable_idle,
-                               budget=self.num_records * self.ring_slots)
+                               budget=self.num_records * self.ring_slots,
+                               quantum=self.k_quantum)
             self._stable_idle = idle
             self._commits_since_sweep = 0
             k_sh = from_global(versions, jnp.asarray(new_k),
                                pad_value=self.k_min)
             # insertion cursors must stay inside the (possibly shrunk)
             # effective window; grown records keep their cursor as-is
-            rings = dataclasses.replace(
-                versions.rings, head=versions.rings.head % k_sh)
-            versions = dataclasses.replace(versions, rings=rings,
-                                           k_eff=k_sh)
+            if versions.rings is not None:
+                prim = dataclasses.replace(
+                    versions.rings, head=versions.rings.head % k_sh)
+                versions = dataclasses.replace(versions, rings=prim,
+                                               k_eff=k_sh)
+            else:
+                prim = dataclasses.replace(
+                    versions.pages, head=versions.pages.head % k_sh)
+                versions = dataclasses.replace(versions, pages=prim,
+                                               k_eff=k_sh)
         self.store = dataclasses.replace(self.store, versions=versions)
         return int(evicted)
 
@@ -352,6 +432,9 @@ class BohmEngine:
         self._overflow_dead = (self._overflow_dead
                                + metrics["ring_overwrote_dead_rec"])
         self._commits_since_sweep += 1
+        if "paged_alloc_failed" in metrics:
+            self._paged_alloc_failed = (self._paged_alloc_failed
+                                        + metrics["paged_alloc_failed"])
         # accumulate as device scalars — int() here would join the host
         # on every commit and serialize the scheduler's dispatch-ahead
         # pipeline; spill_stats() converts on demand
@@ -401,6 +484,56 @@ class BohmEngine:
             self.n_shards * self.spill_buckets * self.spill_slots)
         return dict({k: int(v) for k, v in self._spill_totals.items()},
                     spill_occupancy=occupancy, spill_capacity=capacity)
+
+    def storage_stats(self) -> Dict[str, object]:
+        """Physical storage summary (the paged-store headline number):
+        how many version slots the primary level allocates and how full
+        they are, against the dense-equivalent footprint ``R x k_max``.
+        ``physical_slots`` counts ALLOCATED slot capacity on one
+        consistent base (dense: all of R x k_max; paged: the whole
+        slab, free-list pages included — ``mapped_slots`` is the
+        in-use subset); ``physical_version_words`` prices the same base
+        at the per-slot (begin, end, payload) word cost plus the paged
+        page tables, so layouts are comparable in words of memory.
+        Diagnostic API — synchronises."""
+        D = self.workload.payload_words
+        versions = self.store.versions
+        dense_slots = self.num_records * self.k_max
+        stats: Dict[str, int] = {
+            "layout": "paged" if self.paged else "dense",
+            "num_records": self.num_records,
+            "k_max": self.k_max,
+            "dense_equiv_slots": dense_slots,
+            "dense_equiv_words": dense_slots * (2 + D),
+            "slot_occupancy": int(jnp.sum(store_occupancy(versions))),
+        }
+        if self.paged:
+            pages = versions.pages
+            mapped = int(jnp.sum(pages.page_table >= 0))
+            total = self.n_shards * self.pages_per_shard
+            stats.update({
+                "page_slots": self.page_slots,
+                "pages_total": total,
+                "pages_mapped": mapped,
+                "pages_free": total - mapped,
+                # one consistent base: the whole slab is allocated
+                # memory (free-list pages included); mapped_slots is
+                # the in-use subset
+                "physical_slots": total * self.page_slots,
+                "mapped_slots": mapped * self.page_slots,
+                # slab + page tables; tables cost one i32 per entry
+                "physical_version_words": (
+                    total * self.page_slots * (2 + D)
+                    + self.n_shards * versions.records_per_shard
+                    * pages.max_pages),
+                "alloc_failed": int(self._paged_alloc_failed),
+            })
+        else:
+            stats.update({
+                "physical_slots": dense_slots,
+                "physical_version_words": dense_slots * (2 + D),
+            })
+        return stats
 
 
 def _bucket_histogram(counts: jax.Array, edges: List[int]

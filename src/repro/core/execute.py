@@ -53,7 +53,9 @@ def init_store(num_records: int, payload_words: int,
                init_value: int = 0, ring_slots: int = 4,
                n_shards: int = 1, spill_buckets: int = 0,
                spill_slots: int = 0,
-               k_init: Optional[int] = None) -> Store:
+               k_init: Optional[int] = None,
+               paged: bool = False, page_slots: int = 4,
+               pages_per_shard: Optional[int] = None) -> Store:
     base = jnp.full((num_records, payload_words), init_value, jnp.int32)
     base_ts = jnp.zeros((num_records,), jnp.int32)
     return Store(
@@ -62,13 +64,17 @@ def init_store(num_records: int, payload_words: int,
         versions=init_sharded_store(base, base_ts, ring_slots, n_shards,
                                     spill_buckets=spill_buckets,
                                     spill_slots=spill_slots,
-                                    k_init=k_init))
+                                    k_init=k_init, paged=paged,
+                                    page_slots=page_slots,
+                                    pages_per_shard=pages_per_shard))
 
 
 def store_from_base(base: jax.Array, base_ts: Optional[jax.Array] = None,
                     ring_slots: int = 4, n_shards: int = 1,
                     spill_buckets: int = 0, spill_slots: int = 0,
-                    k_init: Optional[int] = None) -> Store:
+                    k_init: Optional[int] = None,
+                    paged: bool = False, page_slots: int = 4,
+                    pages_per_shard: Optional[int] = None) -> Store:
     """Store whose initial state (head + ring slot 0) is ``base``."""
     base = jnp.asarray(base, jnp.int32)
     if base_ts is None:
@@ -79,7 +85,9 @@ def store_from_base(base: jax.Array, base_ts: Optional[jax.Array] = None,
                                              n_shards,
                                              spill_buckets=spill_buckets,
                                              spill_slots=spill_slots,
-                                             k_init=k_init))
+                                             k_init=k_init, paged=paged,
+                                             page_slots=page_slots,
+                                             pages_per_shard=pages_per_shard))
 
 
 def execute_plan(plan: Plan, batch: TxnBatch, store: Store,

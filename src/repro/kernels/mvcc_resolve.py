@@ -28,6 +28,17 @@ copy of the window, which would double the HBM traffic of exactly the
 reads that already missed the primary ring. Both kernels share one
 grid/tiling scheme and the same interpret-mode auto-selection, so
 primary and spill resolution behave identically across backends.
+
+``mvcc_resolve_paged`` is the primary-level kernel for the PAGED store
+(repro/store/pages.py): instead of pre-gathered per-read windows it
+takes each read's page-table row plus the resident page slab and fuses
+the page-table gather into the visibility scan — the block-table
+indirection of paged attention applied to version resolution, so reads
+are one kernel with no host-side page walks and no materialised
+[B, MaxP*S] window copies. Unmapped table entries (-1) contribute no
+candidates. The slab blocks are grid-invariant (every B-tile scans the
+same pages); the payload slab still tiles over D so wide payloads
+stream through VMEM as in the other kernels.
 """
 from __future__ import annotations
 
@@ -176,4 +187,82 @@ def mvcc_resolve_masked(begin: jax.Array, end: jax.Array, rec: jax.Array,
         ],
         interpret=interpret,
     )(ts, want, begin, end, rec, data)
+    return vals[:b, :d], found[:b]
+
+
+def _resolve_paged_kernel(ts_ref, pt_ref, begin_ref, end_ref, data_ref,
+                          out_ref, found_ref):
+    ts = ts_ref[...][:, None]                       # [Bb, 1]
+    pt = pt_ref[...]                                # [Bb, MaxP]
+    bb, mp = pt.shape
+    safe = jnp.maximum(pt, 0).reshape(-1)           # [Bb*MaxP]
+    begin = jnp.take(begin_ref[...], safe, axis=0)  # [Bb*MaxP, S]
+    end = jnp.take(end_ref[...], safe, axis=0)
+    s = begin.shape[-1]
+    begin = begin.reshape(bb, mp * s)
+    end = end.reshape(bb, mp * s)
+    mapped = jnp.repeat(pt >= 0, s, axis=1)         # [Bb, MaxP*S]
+    vis = (begin <= ts) & (ts < end) & mapped
+    score = jnp.where(vis, begin, NEG_INF)
+    best = jnp.max(score, axis=1)                   # [Bb]
+    sel = vis & (score == best[:, None])            # exactly one in a
+    #                                                 consistent store
+    data = jnp.take(data_ref[...], safe, axis=0)    # [Bb*MaxP, S, Dd]
+    data = data.reshape(bb, mp * s, -1)
+    out_ref[...] = jnp.sum(
+        jnp.where(sel[:, :, None], data, jnp.zeros_like(data)), axis=1)
+    @pl.when(pl.program_id(1) == 0)
+    def _():
+        found_ref[...] = best > NEG_INF
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_d",
+                                             "interpret"))
+def mvcc_resolve_paged(page_rows: jax.Array, begin: jax.Array,
+                       end: jax.Array, data: jax.Array, ts: jax.Array,
+                       *, block_b: int = 256, block_d: int = 128,
+                       interpret: Optional[bool] = None):
+    """Visibility resolution THROUGH the page table: read i's candidate
+    window is the union of its mapped pages' slots — ``page_rows``
+    [B, MaxP] indexes the slab ``begin``/``end`` [P, S] and ``data``
+    [P, S, D]; -1 entries are unmapped and contribute nothing. The
+    gather runs inside the kernel (block-table indirection), so the
+    [B, MaxP*S] window is never materialised in HBM."""
+    if interpret is None:       # auto-select, overridable per call
+        interpret = default_interpret()
+    b, maxp = page_rows.shape
+    d = data.shape[-1]
+    bb = min(block_b, b)
+    dd = min(block_d, d)
+    pad_b = (-b) % bb
+    pad_d = (-d) % dd
+    if pad_b or pad_d:
+        page_rows = jnp.pad(page_rows, ((0, pad_b), (0, 0)),
+                            constant_values=-1)
+        data = jnp.pad(data, ((0, 0), (0, 0), (0, pad_d)))
+        ts = jnp.pad(ts, (0, pad_b))
+    bp, dp = b + pad_b, d + pad_d
+    p, s = begin.shape
+
+    grid = (bp // bb, dp // dd)
+    vals, found = pl.pallas_call(
+        _resolve_paged_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+            pl.BlockSpec((bb, maxp), lambda i, j: (i, 0)),
+            pl.BlockSpec((p, s), lambda i, j: (0, 0)),
+            pl.BlockSpec((p, s), lambda i, j: (0, 0)),
+            pl.BlockSpec((p, s, dd), lambda i, j: (0, 0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, dd), lambda i, j: (i, j)),
+            pl.BlockSpec((bb,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, dp), data.dtype),
+            jax.ShapeDtypeStruct((bp,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(ts, page_rows, begin, end, data)
     return vals[:b, :d], found[:b]

@@ -15,6 +15,8 @@ from repro.kernels.mvcc_resolve import default_interpret as _interpret
 from repro.kernels.mvcc_resolve import mvcc_resolve as _resolve
 from repro.kernels.mvcc_resolve import \
     mvcc_resolve_masked as _resolve_masked
+from repro.kernels.mvcc_resolve import \
+    mvcc_resolve_paged as _resolve_paged
 
 
 def mvcc_resolve(begin, end, data, ts, **kw):
@@ -29,6 +31,12 @@ def mvcc_resolve_masked(begin, end, rec, want, data, ts, **kw):
     return _resolve_masked(begin, end, rec, want, data, ts, **kw)
 
 
+def mvcc_resolve_paged(page_rows, begin, end, data, ts, **kw):
+    # the paged-store primary: page-table gather fused into the
+    # visibility scan (block-table indirection over the slab)
+    return _resolve_paged(page_rows, begin, end, data, ts, **kw)
+
+
 def decode_attention(q, k, v, kv_len, **kw):
     kw.setdefault("interpret", _interpret())
     return _decode(q, k, v, kv_len, **kw)
@@ -41,5 +49,6 @@ def flash_attention_causal(q, k, v, **kw):
 
 mvcc_resolve_ref = ref.mvcc_resolve_ref
 mvcc_resolve_masked_ref = ref.mvcc_resolve_masked_ref
+mvcc_resolve_paged_ref = ref.mvcc_resolve_paged_ref
 decode_attention_ref = ref.decode_attention_ref
 flash_attention_causal_ref = ref.flash_attention_causal_ref

@@ -38,6 +38,24 @@ def mvcc_resolve_masked_ref(begin: jax.Array, end: jax.Array,
     return vals, found
 
 
+def mvcc_resolve_paged_ref(page_rows: jax.Array, begin: jax.Array,
+                           end: jax.Array, data: jax.Array,
+                           ts: jax.Array):
+    """Paged variant: read i's candidate window is the union of its
+    mapped pages' slots — page_rows [B, MaxP] indexes the slab
+    begin/end [P, S] / data [P, S, D]; -1 = unmapped (no candidates)."""
+    b, maxp = page_rows.shape
+    s = begin.shape[-1]
+    safe = jnp.maximum(page_rows, 0)
+    mapped = (page_rows >= 0)[..., None]                      # [B, MaxP, 1]
+    w_begin = jnp.where(mapped, begin[safe], jnp.iinfo(jnp.int32).max)
+    w_end = jnp.where(mapped, end[safe], jnp.iinfo(jnp.int32).max)
+    w_data = jnp.where(mapped[..., None], data[safe], 0)
+    return mvcc_resolve_ref(w_begin.reshape(b, maxp * s),
+                            w_end.reshape(b, maxp * s),
+                            w_data.reshape(b, maxp * s, -1), ts)
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array) -> jax.Array:
     """q [B,KvH,G,Dh]; k,v [B,T,KvH,Dh]; kv_len [B] or scalar."""

@@ -150,6 +150,31 @@ class ServeEngine:
     def release_state_snapshot(self, handle: SnapshotHandle) -> None:
         self.state.release_snapshot(handle)
 
+    def progress_view(self, ts: Optional[SnapshotHandle] = None,
+                      rids=None) -> Dict[str, np.ndarray]:
+        """Public monitor API: a CONSISTENT snapshot of request progress
+        across every rid, resolved in one ``run_readonly_batch``
+        snapshot-read step (zero bookkeeping writes, never blocks the
+        decode loop). ``ts`` may be a pinned ``SnapshotHandle`` (from
+        ``begin_state_snapshot``) or an explicit timestamp — a dashboard
+        polls the same pin repeatedly and sees the same progress rows no
+        matter how many update batches commit in between; any batch
+        still in flight when the pin was taken is invisible at it. With
+        ``ts=None`` the view is a fresh snapshot of everything committed
+        now. Returns the ``lookup`` field arrays plus the snapshot
+        timestamp the view is pinned at (``view_ts``)."""
+        if rids is None:
+            rids = np.arange(self.max_rids)
+        view = self.lookup(rids, ts)
+        if isinstance(ts, SnapshotHandle):
+            view_ts = ts.ts
+        elif ts is None:
+            view_ts = self.state.current_ts()
+        else:
+            view_ts = int(ts)
+        view["view_ts"] = np.asarray(view_ts)
+        return view
+
     def run(self, max_steps: int = 10_000) -> List[Request]:
         """Continuous batching loop until all submitted requests finish."""
         next_tok: Dict[int, int] = {}

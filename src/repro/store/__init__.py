@@ -7,18 +7,28 @@
 ``spill``    the secondary version tier: a bucketed pool shared across
              records that absorbs LIVE evictions from the primary rings,
              so snapshot history survives K-ring overflow.
+``pages``    paged physical storage: a per-shard page slab + per-record
+             page tables replacing the dense [R, K] rings — cold records
+             hold one page instead of ``k_max`` slots, pages move
+             between records through a deterministic free list.
 ``policy``   adaptive-K reassignment: grows hot records' primary rings
              and shrinks cold ones within a fixed slot budget (host-side,
-             runs at GC boundaries).
-``sharded``  ``ShardedVersionStore``: rings + spill record-partitioned
-             over the ``cc`` mesh axis — commit, GC and the two-level
-             ``mvcc_resolve`` snapshot reads run per shard with no global
-             store materialisation.
+             runs at GC boundaries; page-quantized for the paged store,
+             with optional EWMA pressure decay for shifting hot sets).
+``sharded``  ``ShardedVersionStore``: primary (rings or pages) + spill
+             record-partitioned over the ``cc`` mesh axis — commit, GC
+             and the two-level ``mvcc_resolve`` snapshot reads run per
+             shard with no global store materialisation.
 
 The engine (``repro.core``) sits on top of this package; the serving KV
 path reaches it through ``BohmEngine.run_readonly_batch``.
 """
-from repro.store.policy import reassign_k
+from repro.store.pages import (PageSlab, commit_paged, free_page_count,
+                               gather_windows_paged, gc_pages,
+                               init_page_slab, mapped_page_count,
+                               mask_gathered_windows, page_owner_index,
+                               paged_occupancy)
+from repro.store.policy import decay_pressure, reassign_k
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, init_ring,
                               pin_stabbed, ring_occupancy)
@@ -37,5 +47,8 @@ __all__ = [
     "gather_windows_sharded", "gc_sharded", "global_record_ids",
     "init_sharded_store", "resolve_sharded", "store_occupancy",
     "to_global", "unshard", "SpillPool", "gc_spill", "init_spill_pool",
-    "spill_commit", "spill_occupancy", "reassign_k",
+    "spill_commit", "spill_occupancy", "reassign_k", "decay_pressure",
+    "PageSlab", "commit_paged", "free_page_count", "gather_windows_paged",
+    "gc_pages", "init_page_slab", "mapped_page_count",
+    "mask_gathered_windows", "page_owner_index", "paged_occupancy",
 ]

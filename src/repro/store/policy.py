@@ -19,10 +19,41 @@ fill first from the pool of slots donated by pressure-free records, and a
 second call with the same pressure vector returns the same assignment
 (either every pressured record reached ``k_max`` or every donor reached
 ``k_min``) — which is what keeps ``gc_sweep`` idempotent.
+
+Two refinements on top of the base pass:
+
+  * ``quantum`` — capacity moves in multiples of a quantum (the paged
+    store's ``page_slots``): the pass runs in quantum units with every
+    bound rounded CONSERVATIVELY (floors round up), so reassignment is
+    a physical page grant/reclaim rather than a logical cap, and all
+    the invariants (budget conserved, floor respected, fixpoint) hold
+    in quantum units too.
+  * ``decay_pressure`` — an EWMA with a configurable half-life over the
+    per-sweep live-eviction deltas. Raw cumulative pressure never
+    forgets: a record that was hot once holds its peak grant forever
+    even after the hot set migrates. With decay, a cooled record's
+    pressure halves every ``half_life`` sweeps and eventually truncates
+    to zero, at which point it becomes a donor and its pages flow to
+    the new hot set (engine knob ``pressure_decay``).
 """
 from __future__ import annotations
 
 import numpy as np
+
+
+def decay_pressure(prev: np.ndarray, delta: np.ndarray,
+                   half_life: float) -> np.ndarray:
+    """One EWMA step of the policy's pressure input: the accumulated
+    pressure halves every ``half_life`` sweeps and this sweep's fresh
+    live-eviction counts ``delta`` are added at full weight. Returns a
+    float vector — ``reassign_k`` truncates it to integers, so a cooled
+    record's pressure reaches exactly zero (donor eligibility) after
+    finitely many idle sweeps."""
+    if half_life <= 0:
+        raise ValueError("pressure half-life must be > 0 sweeps")
+    alpha = 0.5 ** (1.0 / float(half_life))
+    return np.asarray(prev, np.float64) * alpha + np.asarray(delta,
+                                                             np.float64)
 
 
 def _fill_first(order: np.ndarray, cap: np.ndarray,
@@ -40,7 +71,8 @@ def reassign_k(pressure: np.ndarray, k_eff: np.ndarray, *,
                k_min: int = 1, k_max: int, k_base: int | None = None,
                occupancy: np.ndarray | None = None,
                stable_idle: np.ndarray | None = None,
-               budget: int | None = None) -> np.ndarray:
+               budget: int | None = None,
+               quantum: int = 1) -> np.ndarray:
     """Deterministic slot transfer from cold records to hot ones.
 
     ``pressure``  [R] — live-eviction counts (the policy input);
@@ -81,9 +113,36 @@ def reassign_k(pressure: np.ndarray, k_eff: np.ndarray, *,
     at its floor, so calling it again changes nothing (gc_sweep
     idempotence — reassignment caps only future insertions and cannot
     change occupancy itself).
+
+    ``quantum > 1`` runs the whole pass in units of ``quantum`` slots
+    (the paged store's page granularity): ``k_eff`` and ``k_max`` must
+    be multiples, every floor rounds UP to the next multiple (so the
+    occupancy+1 invariant still holds in slots), and the returned
+    capacities stay multiples — a grant or reclaim is then exactly a
+    whole-page transfer.
     """
     if k_min < 1:
         raise ValueError("k_min must be >= 1 (0-slot rings cannot commit)")
+    if quantum > 1:
+        q = int(quantum)
+        k_arr = np.asarray(k_eff, np.int64)
+        if (k_arr % q).any():
+            raise ValueError("k_eff entries must be multiples of quantum")
+        if k_max % q:
+            raise ValueError("k_max must be a multiple of quantum")
+        occ_q = None
+        if occupancy is not None:
+            # inner floor max(k_min_q, occ_q + 1) must cover the slot
+            # floor occ + 1: occ_q + 1 = ceil((occ + 1) / q)
+            occ_q = -(-(np.asarray(occupancy, np.int64) + 1) // q) - 1
+        out = reassign_k(pressure, k_arr // q,
+                         k_min=-(-int(k_min) // q), k_max=int(k_max) // q,
+                         k_base=None if k_base is None
+                         else -(-int(k_base) // q),
+                         occupancy=occ_q, stable_idle=stable_idle,
+                         budget=None if budget is None
+                         else int(budget) // q)
+        return (out.astype(np.int64) * q).astype(np.int32)
     pressure = np.asarray(pressure, np.int64)
     k = np.asarray(k_eff, np.int64).copy()
     if budget is not None and int(k.sum()) > int(budget):

@@ -44,6 +44,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.store.pages import (PageSlab, commit_paged, gather_windows_paged,
+                               gc_pages, init_page_slab,
+                               mask_gathered_windows, paged_occupancy)
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, ring_occupancy)
 from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
@@ -57,47 +60,71 @@ _EVICT_KEYS = ("evict_rec", "evict_begin", "evict_end", "evict_payload",
 
 @dataclasses.dataclass(frozen=True)
 class ShardedVersionStore:
-    """Version rings + spill pools stacked over a leading shard axis.
+    """Primary version storage + spill pools stacked over a leading
+    shard axis.
 
-    ``rings`` arrays carry shapes [n, R_local, ...] where
+    The primary level is EITHER ``rings`` (dense [n, Rl, K] per-record
+    rings) OR ``pages`` (a paged slab [n, P, S] + page table
+    [n, Rl, MaxP] — see ``repro.store.pages``); exactly one is set.
     ``R_local = ceil(num_records / n)``; records past ``num_records``
-    (hash-padding) hold empty rings and are never read or written.
-    ``spill`` (optional) holds each shard's secondary version pool —
-    live evictions from the primary rings land there and the resolve
+    (hash-padding) hold empty rings / no pages and are never read or
+    written. ``spill`` (optional) holds each shard's secondary version
+    pool — live evictions from the primary land there and the resolve
     path falls through to it. ``k_eff`` [n, R_local] is each record's
-    effective primary-ring capacity (adaptive K; <= the physical slot
-    count, insertion-only — resolution and GC always scan all slots).
+    effective primary capacity (adaptive K; insertion-only — resolution
+    and GC always scan all physical slots).
     """
-    rings: VersionRing       # stacked: begin/end [n, Rl, K], head [n, Rl]
+    rings: Optional[VersionRing]  # stacked: begin/end [n, Rl, K] or None
     spill: Optional[SpillPool]   # stacked [n, B, S, ...] or None
     k_eff: jax.Array         # [n, Rl] i32 per-record ring capacity
     num_records: int         # global record count (static)
+    pages: Optional[PageSlab] = None   # stacked [n, P, S, ...] or None
+
+    @property
+    def paged(self) -> bool:
+        return self.pages is not None
 
     @property
     def n_shards(self) -> int:
-        return self.rings.begin.shape[0]
+        return (self.rings.begin if self.rings is not None
+                else self.pages.page_table).shape[0]
 
     @property
     def records_per_shard(self) -> int:
-        return self.rings.begin.shape[1]
+        return (self.rings.begin if self.rings is not None
+                else self.pages.page_table).shape[1]
 
     @property
     def num_slots(self) -> int:
-        return self.rings.begin.shape[2]
+        """Logical slot ceiling per record (dense K, or MaxP * S)."""
+        if self.rings is not None:
+            return self.rings.begin.shape[2]
+        return self.pages.page_table.shape[2] * self.pages.begin.shape[2]
 
 
 jax.tree_util.register_dataclass(
-    ShardedVersionStore, data_fields=("rings", "spill", "k_eff"),
+    ShardedVersionStore, data_fields=("rings", "spill", "k_eff", "pages"),
     meta_fields=("num_records",))
 
 
-def _ring0(store: ShardedVersionStore) -> VersionRing:
-    """The squeezed single ring of an n_shards == 1 store."""
-    return jax.tree.map(lambda x: x[0], store.rings)
+def _primary(store: ShardedVersionStore):
+    """The stacked primary level: rings or pages (exactly one is set)."""
+    return store.rings if store.rings is not None else store.pages
 
 
-def _take_shard(store: ShardedVersionStore, s: int) -> VersionRing:
-    return jax.tree.map(lambda x: x[s], store.rings)
+def _with_primary(store: ShardedVersionStore, prim):
+    if store.rings is not None:
+        return dataclasses.replace(store, rings=prim)
+    return dataclasses.replace(store, pages=prim)
+
+
+def _ring0(store: ShardedVersionStore):
+    """The squeezed single primary of an n_shards == 1 store."""
+    return jax.tree.map(lambda x: x[0], _primary(store))
+
+
+def _take_shard(store: ShardedVersionStore, s: int):
+    return jax.tree.map(lambda x: x[s], _primary(store))
 
 
 def _take_spill(store: ShardedVersionStore, s) -> Optional[SpillPool]:
@@ -111,12 +138,23 @@ def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
                        n_shards: int = 1,
                        spill_buckets: int = 0,
                        spill_slots: int = 0,
-                       k_init: Optional[int] = None) -> ShardedVersionStore:
+                       k_init: Optional[int] = None,
+                       paged: bool = False,
+                       page_slots: int = 4,
+                       pages_per_shard: Optional[int] = None
+                       ) -> ShardedVersionStore:
     """Store whose slot 0 holds the initial open version of every record,
     hash-partitioned into ``n_shards`` rings.  ``spill_buckets`` x
     ``spill_slots`` > 0 attaches a per-shard spill pool; ``k_init`` caps
     each record's effective ring capacity below the physical
-    ``num_slots`` (the adaptive-K starting point)."""
+    ``num_slots`` (the adaptive-K starting point).
+
+    ``paged=True`` replaces the dense [Rl, K] rings with a per-shard
+    page slab (``repro.store.pages``): ``pages_per_shard`` pages of
+    ``page_slots`` slots, page tables sized ``ceil(num_slots /
+    page_slots)`` entries so a record can still reach ``num_slots``
+    logical slots — but only the pages it actually uses are allocated
+    (every real record starts with exactly its initial page)."""
     R, D = base.shape
     if base_ts is None:
         base_ts = jnp.zeros((R,), jnp.int32)
@@ -129,13 +167,29 @@ def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
     base_sh = basep.reshape(Rl, n, D).transpose(1, 0, 2)
     ts_sh = tsp.reshape(Rl, n).T
     real = global_record_ids(n, Rl) < R                       # [n, Rl]
-    begin = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
-    begin = begin.at[:, :, 0].set(jnp.where(real, ts_sh, INF_TS))
-    end = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
-    payload = jnp.zeros((n, Rl, num_slots, D), basep.dtype)
-    payload = payload.at[:, :, 0, :].set(
-        jnp.where(real[..., None], base_sh, 0))
-    head = jnp.full((n, Rl), 1 % num_slots, jnp.int32)
+    rings = pages = None
+    if paged:
+        max_pages = -(-int(num_slots) // int(page_slots))
+        if pages_per_shard is None:
+            # per-record ceiling, NOT the pooled slot budget: when the
+            # capacity is not a page multiple every record still needs
+            # ceil(k / S) whole pages to physically reach its k_eff
+            pages_per_shard = Rl * -(-int(k_init or num_slots)
+                                     // int(page_slots))
+        pages = jax.vmap(
+            lambda b, ts, re: init_page_slab(b, ts, re, pages_per_shard,
+                                             page_slots, max_pages)
+        )(base_sh, ts_sh, real)
+    else:
+        begin = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
+        begin = begin.at[:, :, 0].set(jnp.where(real, ts_sh, INF_TS))
+        end = jnp.full((n, Rl, num_slots), INF_TS, jnp.int32)
+        payload = jnp.zeros((n, Rl, num_slots, D), basep.dtype)
+        payload = payload.at[:, :, 0, :].set(
+            jnp.where(real[..., None], base_sh, 0))
+        head = jnp.full((n, Rl), 1 % num_slots, jnp.int32)
+        rings = VersionRing(begin=begin, end=end, payload=payload,
+                            head=head)
     spill = None
     if int(spill_buckets) > 0 and int(spill_slots) > 0:
         pool = init_spill_pool(spill_buckets, spill_slots, D, basep.dtype)
@@ -143,10 +197,9 @@ def init_sharded_store(base: jax.Array, base_ts: Optional[jax.Array] = None,
             lambda x: jnp.broadcast_to(x[None], (n,) + x.shape), pool)
     k0 = num_slots if k_init is None else min(int(k_init), num_slots)
     return ShardedVersionStore(
-        rings=VersionRing(begin=begin, end=end, payload=payload, head=head),
-        spill=spill,
+        rings=rings, spill=spill,
         k_eff=jnp.full((n, Rl), k0, jnp.int32),
-        num_records=R)
+        num_records=R, pages=pages)
 
 
 def global_record_ids(n_shards: int, records_per_shard: int) -> jax.Array:
@@ -159,6 +212,11 @@ def global_record_ids(n_shards: int, records_per_shard: int) -> jax.Array:
 def unshard(store: ShardedVersionStore) -> VersionRing:
     """Materialise the global [R, K] ring. Tests/debug only — no hot path
     calls this (the whole point of the sharded store)."""
+    if store.rings is None:
+        raise ValueError("unshard materialises dense rings; a paged "
+                         "store has no global [R, K] layout — compare "
+                         "reads (resolve_sharded) or use "
+                         "gather_windows_sharded instead")
     n, Rl = store.n_shards, store.records_per_shard
     R = store.num_records
 
@@ -191,7 +249,9 @@ def from_global(store: ShardedVersionStore, per_record: jax.Array,
 
 def store_occupancy(store: ShardedVersionStore) -> jax.Array:
     """[R] live version count per global record."""
-    return to_global(store, ring_occupancy(store.rings))
+    if store.rings is not None:
+        return to_global(store, ring_occupancy(store.rings))
+    return to_global(store, jax.vmap(paged_occupancy)(store.pages))
 
 
 # ---------------------------------------------------------------------------
@@ -209,16 +269,19 @@ def _mask_to_shard(n: int, shard, w_rec, w_key, w_valid):
     return rec_l, key_l, owned
 
 
-def _commit_one_shard(ring_s: VersionRing, spill_s: Optional[SpillPool],
+def _commit_one_shard(ring_s, spill_s: Optional[SpillPool],
                       k_eff_s: jax.Array, rec_l, key_l, owned, w_begin_ts,
                       w_end_ts, w_data, watermark, ts_window, pin_ts):
-    """One shard's full commit: primary ring maintenance, then its live
+    """One shard's full commit: primary maintenance (dense ring or paged
+    slab — same contract, dispatched on the pytree type), then its live
     evictees into the local spill pool (same clamped watermark)."""
     with_spill = spill_s is not None
-    ring_o, m = commit_versions(ring_s, rec_l, key_l, owned, w_begin_ts,
-                                w_end_ts, w_data, watermark,
-                                ts_window=ts_window, k_eff=k_eff_s,
-                                pin_ts=pin_ts, with_evictees=with_spill)
+    commit_fn = commit_paged if isinstance(ring_s, PageSlab) \
+        else commit_versions
+    ring_o, m = commit_fn(ring_s, rec_l, key_l, owned, w_begin_ts,
+                          w_end_ts, w_data, watermark,
+                          ts_window=ts_window, k_eff=k_eff_s,
+                          pin_ts=pin_ts, with_evictees=with_spill)
     if with_spill:
         ev = {k: m.pop(k) for k in _EVICT_KEYS}
         wm = jnp.asarray(watermark, jnp.int32)
@@ -254,8 +317,9 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
     """
     n = store.n_shards
     with_spill = store.spill is not None
+    paged = store.paged
     if n == 1:
-        ring, spill0, metrics = _commit_one_shard(
+        prim, spill0, metrics = _commit_one_shard(
             _ring0(store), _take_spill(store, 0), store.k_eff[0],
             w_rec, w_key, w_valid, w_begin_ts, w_end_ts, w_data,
             watermark, ts_window, pin_ts)
@@ -264,40 +328,41 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
         new_spill = None if spill0 is None else jax.tree.map(
             lambda x: x[None], spill0)
         return dataclasses.replace(
-            store, rings=jax.tree.map(lambda x: x[None], ring),
+            _with_primary(store, jax.tree.map(lambda x: x[None], prim)),
             spill=new_spill), metrics
 
-    def one_shard(ring_s: VersionRing, spill_s, k_eff_s, shard):
+    def one_shard(prim_s, spill_s, k_eff_s, shard):
         rec_l, key_l, owned = _mask_to_shard(n, shard, w_rec, w_key,
                                              w_valid)
-        return _commit_one_shard(ring_s, spill_s, k_eff_s, rec_l, key_l,
+        return _commit_one_shard(prim_s, spill_s, k_eff_s, rec_l, key_l,
                                  owned, w_begin_ts, w_end_ts, w_data,
                                  watermark, ts_window, pin_ts)
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
 
-        def body(rings, spill, k_eff):
+        def body(prim, spill, k_eff):
             squeeze = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
-            ring_o, spill_o, m = one_shard(squeeze(rings),
+            prim_o, spill_o, m = one_shard(squeeze(prim),
                                            None if spill is None
                                            else squeeze(spill),
                                            k_eff[0],
                                            jax.lax.axis_index(axis))
-            return jax.tree.map(lambda x: x[None], (ring_o, spill_o, m))
+            return jax.tree.map(lambda x: x[None], (prim_o, spill_o, m))
 
-        out_struct = (_ring_struct(),
+        out_struct = (_page_struct() if paged else _ring_struct(),
                       None if not with_spill else _spill_struct(),
-                      _metrics_struct(with_spill))
-        rings, spill, per = _shard_map(
+                      _metrics_struct(with_spill, paged))
+        prim, spill, per = _shard_map(
             body, mesh=mesh,
             in_specs=jax.tree.map(lambda _: P(axis),
-                                  (store.rings, store.spill, store.k_eff)),
+                                  (_primary(store), store.spill,
+                                   store.k_eff)),
             out_specs=jax.tree.map(lambda _: P(axis), out_struct))(
-            store.rings, store.spill, store.k_eff)
+            _primary(store), store.spill, store.k_eff)
     else:
-        rings, spill, per = jax.vmap(one_shard)(
-            store.rings, store.spill, store.k_eff,
+        prim, spill, per = jax.vmap(one_shard)(
+            _primary(store), store.spill, store.k_eff,
             jnp.arange(n, dtype=jnp.int32))
 
     R = store.num_records
@@ -314,12 +379,17 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
         "ring_occ_mean": jnp.sum(per["ring_occ_mean"])
         * store.records_per_shard / R,
     }
+    if paged:
+        for k in ("paged_alloc_failed", "paged_pages_allocated",
+                  "paged_pages_free"):
+            metrics[k] = jnp.sum(per[k])
     if with_spill:
         for k in ("spill_freed", "spill_admitted", "spill_dropped",
                   "spill_overwrote", "spill_overwrote_pinned",
                   "spill_occupancy"):
             metrics[k] = jnp.sum(per[k])
-    return dataclasses.replace(store, rings=rings, spill=spill), metrics
+    return dataclasses.replace(_with_primary(store, prim),
+                               spill=spill), metrics
 
 
 def _ring_struct():
@@ -327,17 +397,25 @@ def _ring_struct():
     return VersionRing(begin=z, end=z, payload=z, head=z)
 
 
+def _page_struct():
+    z = jnp.zeros((), jnp.int32)
+    return PageSlab(begin=z, end=z, payload=z, page_table=z, head=z)
+
+
 def _spill_struct():
     z = jnp.zeros((), jnp.int32)
     return SpillPool(begin=z, end=z, rec=z, payload=z)
 
 
-def _metrics_struct(with_spill: bool = False):
+def _metrics_struct(with_spill: bool = False, paged: bool = False):
     z = jnp.zeros((), jnp.int32)
     m = {"ring_evicted": z, "ring_overflow_dropped": z,
          "ring_overwrote_live": z, "ring_overwrote_dead": z,
          "ring_overwrote_rec": z, "ring_overwrote_dead_rec": z,
          "ring_occ_max": z, "ring_occ_mean": z}
+    if paged:
+        m.update({"paged_alloc_failed": z, "paged_pages_allocated": z,
+                  "paged_pages_free": z})
     if with_spill:
         m.update({"spill_freed": z, "spill_admitted": z,
                   "spill_dropped": z, "spill_overwrote": z,
@@ -348,17 +426,26 @@ def _metrics_struct(with_spill: bool = False):
 def gc_sharded(store: ShardedVersionStore, watermark: jax.Array
                ) -> Tuple[ShardedVersionStore, jax.Array]:
     """Standalone watermark GC sweep over every shard (see ``gc_ring`` /
-    ``gc_spill``).  The condition ``end <= watermark`` is per-slot
-    elementwise with a global scalar watermark, so the same expression
-    runs unchanged over the stacked [n, Rl, K] (and [n, B, S]) arrays on
-    ANY substrate — mesh-sharded device arrays, vmapped logical shards,
-    or the single ring."""
-    rings, evicted = gc_ring(store.rings, watermark)
+    ``gc_spill`` / ``gc_pages``).  The dense condition ``end <=
+    watermark`` is per-slot elementwise with a global scalar watermark,
+    so it runs unchanged over the stacked [n, Rl, K] (and [n, B, S])
+    arrays on ANY substrate — mesh-sharded device arrays, vmapped
+    logical shards, or the single ring. The paged sweep additionally
+    returns fully-drained stranded pages to each shard's free list
+    (per-shard scatters, vmapped over the shard axis)."""
+    if store.rings is not None:
+        prim, evicted = gc_ring(store.rings, watermark)
+    else:
+        prim, per_shard = jax.vmap(
+            lambda p, k: gc_pages(p, watermark, k)
+        )(store.pages, store.k_eff)
+        evicted = jnp.sum(per_shard)
     spill = store.spill
     if spill is not None:
         spill, freed = gc_spill(spill, watermark)
         evicted = evicted + freed
-    return dataclasses.replace(store, rings=rings, spill=spill), evicted
+    return dataclasses.replace(_with_primary(store, prim),
+                               spill=spill), evicted
 
 
 # ---------------------------------------------------------------------------
@@ -368,28 +455,51 @@ def gc_sharded(store: ShardedVersionStore, watermark: jax.Array
 def gather_windows_sharded(store: ShardedVersionStore, records: jax.Array
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """(begin [B, K], end [B, K], payload [B, K, D]) candidate windows per
-    read, gathered from each record's owning shard (primary rings only —
-    the spill fall-through lives in ``resolve_sharded``)."""
+    read, gathered from each record's owning shard (primary level only —
+    the spill fall-through lives in ``resolve_sharded``). For a paged
+    store the windows are materialised through the page table (K =
+    MaxP * S, unmapped pages contribute empty slots) — diagnostic path;
+    the hot read path keeps the gather fused in the kernel."""
     if store.n_shards == 1:
-        return gather_windows(_ring0(store), records)
+        prim = _ring0(store)
+        if isinstance(prim, PageSlab):
+            return gather_windows_paged(prim, records)
+        return gather_windows(prim, records)
     n = store.n_shards
     rec = jnp.maximum(jnp.asarray(records, jnp.int32), 0)
     shard, loc = rec % n, rec // n
+    if store.paged:
+        p = store.pages
+        pt = p.page_table[shard, loc]                     # [B, MaxP]
+        safe = jnp.maximum(pt, 0)
+        sh = shard[:, None]
+        return mask_gathered_windows(pt, p.begin[sh, safe],
+                                     p.end[sh, safe],
+                                     p.payload[sh, safe])
     r = store.rings
     return r.begin[shard, loc], r.end[shard, loc], r.payload[shard, loc]
 
 
-def _resolve_two_level(ring_s: VersionRing, spill_s: Optional[SpillPool],
+def _resolve_two_level(prim_s, spill_s: Optional[SpillPool],
                        local_rec: jax.Array, ts: jax.Array,
                        interpret: Optional[bool]
                        ) -> Tuple[jax.Array, jax.Array]:
-    """Primary-ring resolve with the spill fall-through: at most one of
-    the two levels holds the version visible at ``ts`` (a version is
-    evicted from the ring exactly when it moves to spill, and [begin, end)
-    windows partition a record's timeline), so combining is a select."""
-    begin, end, payload = gather_windows(ring_s, local_rec)
-    vals, found = ops.mvcc_resolve(begin, end, payload, ts,
-                                   interpret=interpret)
+    """Primary resolve with the spill fall-through: at most one of the
+    two levels holds the version visible at ``ts`` (a version is evicted
+    from the primary exactly when it moves to spill, and [begin, end)
+    windows partition a record's timeline), so combining is a select.
+    The primary is either a dense ring (pre-gathered windows through
+    ``mvcc_resolve``) or a page slab (page-table rows through the fused
+    ``mvcc_resolve_paged`` — no window materialisation)."""
+    if isinstance(prim_s, PageSlab):
+        rows = prim_s.page_table[jnp.maximum(local_rec, 0)]
+        vals, found = ops.mvcc_resolve_paged(rows, prim_s.begin,
+                                             prim_s.end, prim_s.payload,
+                                             ts, interpret=interpret)
+    else:
+        begin, end, payload = gather_windows(prim_s, local_rec)
+        vals, found = ops.mvcc_resolve(begin, end, payload, ts,
+                                       interpret=interpret)
     if spill_s is None:
         return vals, found
     bkt = spill_buckets_for(local_rec, spill_s.begin.shape[0])
@@ -416,19 +526,19 @@ def resolve_sharded(store: ShardedVersionStore, records: jax.Array,
         return _resolve_two_level(_ring0(store), _take_spill(store, 0),
                                   local, ts, interpret)
 
-    def one_shard(ring_s: VersionRing, spill_s, shard):
+    def one_shard(prim_s, spill_s, shard):
         owned = (records % n) == shard
         local = jnp.where(owned, records // n, 0)
-        vals, found = _resolve_two_level(ring_s, spill_s, local, ts,
+        vals, found = _resolve_two_level(prim_s, spill_s, local, ts,
                                          interpret)
         return jnp.where(owned[:, None], vals, 0), owned & found
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
 
-        def body(rings, spill):
+        def body(prim, spill):
             squeeze = lambda t: jax.tree.map(lambda x: x[0], t)  # noqa: E731
-            vals, found = one_shard(squeeze(rings),
+            vals, found = one_shard(squeeze(prim),
                                     None if spill is None
                                     else squeeze(spill),
                                     jax.lax.axis_index(axis))
@@ -439,8 +549,8 @@ def resolve_sharded(store: ShardedVersionStore, records: jax.Array,
         return _shard_map(
             body, mesh=mesh,
             in_specs=jax.tree.map(lambda _: P(axis),
-                                  (store.rings, store.spill)),
-            out_specs=(P(), P()))(store.rings, store.spill)
+                                  (_primary(store), store.spill)),
+            out_specs=(P(), P()))(_primary(store), store.spill)
 
     # logical shards on one device: unrolled kernel calls (n is static),
     # merged by ownership — XLA schedules the independent shard resolves

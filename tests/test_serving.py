@@ -140,3 +140,41 @@ def test_pool_exhaustion_raises():
     s.admit()
     with pytest.raises(RuntimeError):
         s.plan_step({0: 1})
+
+
+def test_progress_view_pin_excludes_inflight_batch(setup):
+    """The public monitor API: ``progress_view`` at a pinned snapshot is
+    a consistent historical view — an update batch committed AFTER the
+    pin (the monitor's "in-flight" decode progress) is invisible at it,
+    while the default view sees everything committed."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, slots=2, page_size=8, num_pages=64,
+                      max_pages_per_seq=16, kv_dtype=jnp.float32,
+                      max_rids=16, state_shards=2)
+    rng = np.random.default_rng(5)
+    eng.submit(0, rng.integers(1, 500, 8).astype(np.int32),
+               max_new_tokens=3)
+    eng.run()
+
+    pin = eng.begin_state_snapshot()
+    before = eng.progress_view(pin)
+    assert before["status"][0] == 2 and before["known"][0]
+    assert not before["known"][1]                 # rid 1 not yet served
+    assert int(before["view_ts"]) == pin.ts
+
+    # an update batch lands after the pin (in flight from the monitor's
+    # point of view): rid 1 starts and finishes a request
+    eng.submit(1, rng.integers(1, 500, 8).astype(np.int32),
+               max_new_tokens=2)
+    eng.run()
+
+    pinned = eng.progress_view(pin)               # re-poll the same pin
+    for k in ("seq_len", "n_generated", "last_token", "status", "known"):
+        np.testing.assert_array_equal(pinned[k], before[k])
+    assert not pinned["known"][1]                 # invisible at the pin
+
+    live = eng.progress_view()                    # fresh default view
+    assert live["known"][1] and live["status"][1] == 2
+    assert live["n_generated"][1] == 2
+    assert int(live["view_ts"]) > pin.ts
+    eng.release_state_snapshot(pin)
