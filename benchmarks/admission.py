@@ -32,15 +32,17 @@ subprocess needed — the scheduler decisions are host-side).
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import numpy as np
 
-from benchmarks.common import write_csv
+from benchmarks.common import RESULTS_DIR, write_csv
 from repro.core.engine import BohmEngine
 from repro.core.txn import make_batch
 from repro.core.workloads import make_ycsb
+from repro.obs import PhaseTracer, validate_chrome_trace
 from repro.service import TxnService
 
 N_RECORDS = 8192
@@ -133,15 +135,40 @@ def bench_stream(kind: str, rng, n_passes: int) -> list:
     return rows
 
 
-def run(quick: bool = False) -> list:
+def trace_stream(kind: str = "mixed") -> None:
+    """One traced pass over the stream (SEPARATE from the timed cells —
+    tracing fences every span close, which would distort the timing):
+    exports ``results/admission_trace.json``, a Chrome-trace view of the
+    scheduler's plan/exec/commit spans and merge/overlap/fallback
+    decisions."""
+    rng = np.random.default_rng(47)
+    wl = make_ycsb(payload_words=2)
+    eng = BohmEngine(N_RECORDS, wl, ring_slots=RING_SLOTS,
+                     tracer=PhaseTracer(enabled=True))
+    svc = TxnService(eng, max_inflight=2,
+                     admission_window=max(WINDOWS))
+    svc.submit_many(_stream(rng, kind))
+    svc.drain()
+    eng.gc_sweep()
+    path = RESULTS_DIR / "admission_trace.json"
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    eng.tracer.export(path)
+    counts = validate_chrome_trace(json.loads(path.read_text()))
+    print(f"trace: {path} ({counts['spans']} spans, "
+          f"{counts['instants']} instants)")
+
+
+def run(quick: bool = False, trace: bool = False) -> list:
     rng = np.random.default_rng(47)
     n_passes = 3 if quick else 5
     rows = []
     for kind in ("disjoint_cold", "mixed"):
         rows.extend(bench_stream(kind, rng, n_passes))
     write_csv("admission", rows)
+    if trace:
+        trace_stream()
     return rows
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv)
+    run(quick="--quick" in sys.argv, trace="--trace" in sys.argv)

@@ -10,6 +10,8 @@ from typing import Callable, Dict, List
 import jax
 import numpy as np
 
+from repro.obs import run_metadata
+
 RESULTS_DIR = Path(__file__).resolve().parent / "results"
 
 
@@ -46,8 +48,12 @@ def write_csv(name: str, rows: List[Dict], print_rows: bool = True) -> Path:
 
 
 def write_json(name: str, rows: List[Dict]) -> Path:
+    """JSON twin format: ``{"meta": run_metadata(), "rows": [...]}`` —
+    every artifact is stamped with the environment that produced it
+    (jax version, backend, device count, git SHA, timestamp)."""
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.json"
     with open(path, "w") as f:
-        json.dump(rows, f, indent=2, default=str)
+        json.dump({"meta": run_metadata(), "rows": rows}, f, indent=2,
+                  default=str)
     return path

@@ -1,0 +1,156 @@
+"""Observability report: run a traced workload, export the artifacts.
+
+Drives a conflict-aware ``TxnService`` stream with tracing enabled and a
+shared ``MetricsRegistry``, then writes
+
+  results/obs_trace.json     Chrome ``trace_event`` JSON of the run's
+                             plan/exec/commit spans, admission-decision
+                             instants and gc/reassign spans — load it in
+                             Perfetto or chrome://tracing;
+  results/obs_health.json    {"meta", "health", "counters", "phases"}:
+                             the post-run MVCC health gauges, the full
+                             registry snapshot, and per-phase wall-time
+                             stats derived from the span ring;
+
+and prints a markdown health report. ``--validate`` re-reads the
+exported trace and checks the Chrome trace invariants (B/E LIFO
+matching, monotonic timestamps) — the CI obs-smoke gate.
+
+    PYTHONPATH=src python -m benchmarks.obs_report [--quick] [--validate]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESULTS_DIR
+from repro.core.engine import BohmEngine
+from repro.core.txn import Workload, make_batch
+from repro.obs import PhaseTracer, run_metadata, validate_chrome_trace
+from repro.service import TxnService
+
+T, OPS, R = 64, 4, 256
+
+
+def _workload() -> Workload:
+    def rmw(vals, args):
+        return vals.at[..., 0].add(args[0]), jnp.zeros((), bool)
+
+    def read_only(vals, args):
+        return vals, jnp.zeros((), bool)
+
+    return Workload(name="inc", n_read=OPS, n_write=OPS, payload_words=2,
+                    branches=(rmw, read_only))
+
+
+N_PARTS = 8
+
+
+def _batch(rng):
+    """Partition-local batches: each batch's keys stay inside one of
+    ``N_PARTS`` record ranges, so the admission window sees disjoint
+    batches (merge / overlap) AND same-partition collisions (conflict
+    fallback) — the trace shows every decision kind."""
+    part = int(rng.integers(0, N_PARTS))
+    lo, hi = part * R // N_PARTS, (part + 1) * R // N_PARTS
+    reads = rng.integers(lo, hi, (T, OPS))
+    wmask = rng.random((T, OPS)) < 0.5
+    writes = np.where(wmask, reads, -1)
+    types = rng.integers(0, 2, T)
+    args = rng.integers(1, 5, (T, 1))
+    return make_batch(reads, writes, types, args)
+
+
+def run(n_batches: int, spill: bool) -> dict:
+    tracer = PhaseTracer(enabled=True, anomaly_threshold=3.0)
+    eng = BohmEngine(R, _workload(), ring_slots=8,
+                     spill_slots=64 if spill else 0,
+                     tracer=tracer)
+    svc = TxnService(eng, max_inflight=2, admission_window=4)
+    rng = np.random.default_rng(0)
+    tickets = svc.submit_many([_batch(rng) for _ in range(n_batches)])
+    snap = svc.begin_snapshot()
+    for t in tickets:
+        svc.wait(t)
+    svc.release_snapshot(snap)
+    eng.gc_sweep()
+    svc.drain()
+
+    health = svc.health()
+    counters = eng.metrics.snapshot(include_gauges=False)
+    phases = []
+    for name, durs in sorted(tracer.span_durations().items()):
+        d = np.asarray(durs) * 1e3
+        phases.append({"phase": name, "count": len(durs),
+                       "mean_ms": round(float(d.mean()), 4),
+                       "p50_ms": round(float(np.percentile(d, 50)), 4),
+                       "max_ms": round(float(d.max()), 4),
+                       "anomalies": tracer.anomalies.get(name, 0)})
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    trace_path = RESULTS_DIR / "obs_trace.json"
+    tracer.export(trace_path)
+    health_path = RESULTS_DIR / "obs_health.json"
+    with open(health_path, "w") as f:
+        json.dump({"meta": run_metadata(), "health": health,
+                   "counters": counters, "phases": phases}, f, indent=2,
+                  default=str)
+    return {"trace_path": trace_path, "health_path": health_path,
+            "health": health, "counters": counters, "phases": phases}
+
+
+def report(out: dict) -> None:
+    print("## Observability report\n")
+    print("### Phase spans\n")
+    print("| phase | count | mean ms | p50 ms | max ms | anomalies |")
+    print("|---|---|---|---|---|---|")
+    for p in out["phases"]:
+        print(f"| {p['phase']} | {p['count']} | {p['mean_ms']} | "
+              f"{p['p50_ms']} | {p['max_ms']} | {p['anomalies']} |")
+    print("\n### Health gauges\n")
+    print("| gauge | value |")
+    print("|---|---|")
+    for k, v in out["health"].items():
+        if isinstance(v, list):
+            continue
+        print(f"| {k} | {v} |")
+    print("\n### Counters\n")
+    print("| counter | value |")
+    print("|---|---|")
+    for k, v in sorted(out["counters"].items()):
+        if isinstance(v, (int, float)):
+            print(f"| {k} | {v} |")
+    print(f"\ntrace: {out['trace_path']}")
+    print(f"health: {out['health_path']}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="short stream (CI smoke)")
+    ap.add_argument("--validate", action="store_true",
+                    help="re-read the exported trace and check Chrome "
+                         "trace invariants (CI gate)")
+    ap.add_argument("--batches", type=int, default=None)
+    ap.add_argument("--spill", action="store_true",
+                    help="attach a spill tier so spill gauges are live")
+    args = ap.parse_args()
+
+    n = args.batches or (8 if args.quick else 32)
+    out = run(n, spill=args.spill)
+    report(out)
+
+    if args.validate:
+        trace = json.loads(out["trace_path"].read_text())
+        counts = validate_chrome_trace(trace)
+        assert counts["spans"] > 0, "trace exported no spans"
+        assert any(e["ph"] == "i" for e in trace["traceEvents"]), \
+            "trace exported no admission-decision instants"
+        print(f"trace valid: {counts}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,14 @@
 """Summarise benchmark artifacts into one markdown report.
 
-Two sections, each emitted only when its artifacts exist under
+Three sections, each emitted only when its artifacts exist under
 ``benchmarks/results/``:
 
   * the MVCC benchmark tables — the JSON twins written by
     ``benchmarks.run`` (pipeline, admission, spill, paged): scheduler
     wins and storage found-rate/footprint trades, selected columns per
     benchmark;
+  * the observability section — phase span stats, health gauges and the
+    provenance stamp from ``benchmarks.obs_report`` artifacts;
   * the EXPERIMENTS.md optimized-vs-baseline roofline summary from the
     dry-run artifacts (unchanged from the original tool).
 
@@ -46,8 +48,19 @@ def bench_rows(name: str):
     path = RESULTS / f"{name}.json"
     if not path.exists():
         return None
-    rows = json.loads(path.read_text())
+    data = json.loads(path.read_text())
+    # twins are {"meta": ..., "rows": [...]} since the obs PR; bare-list
+    # artifacts from older runs still summarise
+    rows = data.get("rows") if isinstance(data, dict) else data
     return rows if isinstance(rows, list) and rows else None
+
+
+def bench_meta(name: str):
+    path = RESULTS / f"{name}.json"
+    if not path.exists():
+        return None
+    data = json.loads(path.read_text())
+    return data.get("meta") if isinstance(data, dict) else None
 
 
 def print_bench_tables() -> bool:
@@ -74,6 +87,42 @@ def print_bench_tables() -> bool:
     return printed
 
 
+def print_obs_section() -> bool:
+    """Observability artifacts (``benchmarks.obs_report``): phase span
+    stats, selected health gauges, and the provenance stamp."""
+    path = RESULTS / "obs_health.json"
+    if not path.exists():
+        return False
+    data = json.loads(path.read_text())
+    print("\n## Observability (obs_report artifacts)\n")
+    meta = data.get("meta") or {}
+    if meta:
+        print(f"run: jax {meta.get('jax_version')} / "
+              f"{meta.get('backend')} x{meta.get('device_count')} / "
+              f"git {meta.get('git_sha')} / {meta.get('timestamp')}\n")
+    phases = data.get("phases") or []
+    if phases:
+        print("| phase | count | mean ms | p50 ms | max ms | anomalies |")
+        print("|---|---|---|---|---|---|")
+        for p in phases:
+            print(f"| {p['phase']} | {p['count']} | {p['mean_ms']} | "
+                  f"{p['p50_ms']} | {p['max_ms']} | {p['anomalies']} |")
+    health = data.get("health") or {}
+    gauges = [k for k in ("watermark_lag", "active_pins", "live_versions",
+                          "ring_fill_p50", "ring_fill_max",
+                          "pressure_max", "admission_queue_depth")
+              if k in health]
+    if gauges:
+        print("\n| gauge | value |")
+        print("|---|---|")
+        for k in gauges:
+            print(f"| {k} | {health[k]} |")
+    trace = RESULTS / "obs_trace.json"
+    if trace.exists():
+        print(f"\ntrace: {trace} (load in Perfetto / chrome://tracing)")
+    return True
+
+
 def rows_from(path: Path, mesh: str):
     data = json.loads(path.read_text())
     out = {}
@@ -94,6 +143,7 @@ def gmean(xs):
 def main():
     print("## MVCC benchmarks (JSON twins)")
     print_bench_tables()
+    print_obs_section()
 
     base_path = RESULTS / "dryrun_baseline.json"
     opt_path = RESULTS / "dryrun_opt.json"

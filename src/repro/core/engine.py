@@ -37,6 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -49,16 +50,21 @@ from repro.core.execute import (Store, commit, execute_plan, init_store,
                                 store_from_base)
 from repro.core.plan import MAX_BATCH_TXNS, Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
+from repro.obs import MetricsRegistry, PhaseTracer, engine_health
 from repro.store import (INF_TS, decay_pressure, from_global,
                          gather_windows_sharded, gc_sharded, reassign_k,
-                         resolve_sharded, store_occupancy, to_global)
+                         reassign_stats, resolve_sharded, store_occupancy,
+                         to_global)
 
 
 @dataclasses.dataclass(frozen=True)
 class SnapshotHandle:
-    """An active reader registration; holds the GC watermark at <= ts."""
+    """An active reader registration; holds the GC watermark at <= ts.
+    ``t_wall`` (monotonic registration time) feeds the oldest-pin-age
+    health gauge; it never participates in equality/ordering."""
     sid: int
     ts: int
+    t_wall: float = dataclasses.field(default=0.0, compare=False)
 
 
 class BohmEngine:
@@ -73,7 +79,9 @@ class BohmEngine:
                  paged: bool = False, page_slots: int = 4,
                  pages_per_shard: Optional[int] = None,
                  pressure_decay: Optional[float] = None,
-                 k_quantum: Optional[int] = None):
+                 k_quantum: Optional[int] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[PhaseTracer] = None):
         """``spill_slots`` > 0 (default 8) attaches a per-shard spill pool
         of ``spill_buckets`` x ``spill_slots`` slots (default: one bucket
         per 4 local records) — live K-ring evictions land there instead
@@ -103,7 +111,19 @@ class BohmEngine:
         forever; None keeps the raw cumulative histogram. ``k_quantum``
         overrides the policy quantum (default: ``page_slots`` when
         paged, else 1) — the dense twin of a paged store in equivalence
-        tests runs the same page-granular policy."""
+        tests runs the same page-granular policy.
+
+        ``registry`` (optional shared ``repro.obs.MetricsRegistry``)
+        receives every engine counter under ``engine/`` names — hot-path
+        accumulation is device-side (lazy adds on the jitted phases'
+        metric outputs, no host sync); ``registry.snapshot()`` is the one
+        transfer point. Default: a private registry, so the legacy stats
+        surfaces (``overflow_stats`` / ``spill_stats`` /
+        ``storage_stats``) work stand-alone. ``tracer`` (optional
+        ``repro.obs.PhaseTracer``) wraps plan/exec/commit, ``gc_sweep``
+        and ``reassign_k`` in wall-clock spans, fenced by
+        ``block_until_ready`` only at span close when tracing is enabled
+        — disabled tracing (the default) adds no host syncs."""
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
@@ -164,11 +184,11 @@ class BohmEngine:
         self._ts_next = 1                  # host mirror of store.ts_counter
         self._snapshots: Dict[int, SnapshotHandle] = {}
         self._next_sid = 0
-        self._overflow = jnp.zeros_like(self.store.versions.k_eff)
-        self._overflow_dead = jnp.zeros_like(self.store.versions.k_eff)
-        self._spill_totals = {"spill_admitted": 0, "spill_dropped": 0,
-                              "spill_overwrote_pinned": 0}
-        self._paged_alloc_failed = 0       # accumulated as device scalars
+        self.metrics = registry if registry is not None \
+            else MetricsRegistry()
+        self.tracer = tracer if tracer is not None \
+            else PhaseTracer(enabled=False)
+        self._declare_metrics()
         # adaptive-K hysteresis: a record donates capacity only after
         # sitting idle across two consecutive policy passes
         self._stable_idle = np.zeros((num_records,), bool)
@@ -191,6 +211,26 @@ class BohmEngine:
             _readonly_resolve, mesh=mesh, cc_axis=cc_axis,
             interpret=resolve_interpret))
 
+    _SPILL_KEYS = ("spill_admitted", "spill_dropped",
+                   "spill_overwrote_pinned")
+
+    def _declare_metrics(self) -> None:
+        """(Re)declare the engine's device counters on the registry —
+        run at init and at ``reset_store`` (the counters' lifecycle
+        follows the store's). All under ``engine/`` names; the legacy
+        stats surfaces read through them unchanged."""
+        m = self.metrics
+        k_eff = self.store.versions.k_eff
+        scalar = jnp.zeros((), jnp.int32)
+        m.declare("engine/ring_overwrote_rec", k_eff)
+        m.declare("engine/ring_overwrote_dead_rec", k_eff)
+        for name in ("ring_overwrote_live", "ring_overwrote_dead",
+                     "paged_alloc_failed", "aborts", "waves",
+                     *self._SPILL_KEYS):
+            m.declare(f"engine/{name}", scalar)
+        m.set("engine/commits", 0)
+        m.set("engine/txns_committed", 0)
+
     # -- update path -------------------------------------------------------
     def run_batch(self, batch: TxnBatch
                   ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
@@ -200,16 +240,22 @@ class BohmEngine:
         fused single-dispatch twin used by throughput benchmarks)."""
         if batch.size > MAX_BATCH_TXNS:
             raise ValueError("composite uint32 keys require T <= 2^12")
+        tr = self.tracer
         wm = jnp.asarray(self.watermark(), jnp.int32)
         pins = self.pin_array()
-        plan = self._plan(batch, self.store.ts_counter)
-        w_data, read_vals, exec_metrics = self._exec(plan, batch,
-                                                     self.store)
-        self.store, ring_metrics = self._commit(plan, batch, self.store,
-                                                w_data, wm, None, pins)
+        with tr.span("plan_phase", txns=batch.size) as sp:
+            plan = sp.fence(self._plan(batch, self.store.ts_counter))
+        with tr.span("exec_phase", txns=batch.size) as sp:
+            w_data, read_vals, exec_metrics = self._exec(plan, batch,
+                                                         self.store)
+            sp.fence(read_vals)
+        with tr.span("commit_phase", txns=batch.size) as sp:
+            self.store, ring_metrics = self._commit(
+                plan, batch, self.store, w_data, wm, None, pins)
+            sp.fence(self.store.base)
         metrics = dict(exec_metrics, **ring_metrics)
         self._ts_next += batch.size
-        self.record_commit_metrics(metrics)
+        self.record_commit_metrics(metrics, n_txns=batch.size)
         return read_vals, metrics
 
     def run_stream(self, batches) -> Dict[str, jax.Array]:
@@ -250,10 +296,7 @@ class BohmEngine:
                                      or None)
         self._ts_next = 1
         self._snapshots.clear()
-        self._overflow = jnp.zeros_like(self.store.versions.k_eff)
-        self._overflow_dead = jnp.zeros_like(self.store.versions.k_eff)
-        self._spill_totals = {k: 0 for k in self._spill_totals}
-        self._paged_alloc_failed = 0
+        self._declare_metrics()
         self._stable_idle = np.zeros((self.num_records,), bool)
         self._commits_since_sweep = 0
         self._pressure_ewma = np.zeros((self.num_records,), np.float64)
@@ -310,15 +353,34 @@ class BohmEngine:
 
         Returns the number of versions reclaimed (rings + spill);
         synchronises on it."""
-        wm = jnp.asarray(self.watermark(), jnp.int32)
-        versions, evicted = self._gc(self.store.versions, wm)
-        # the policy runs only when commits landed since the last sweep:
-        # a sweep is pure reclamation, so with nothing new committed the
-        # pressure/occupancy inputs are unchanged and rerunning the pass
-        # (or advancing the idle streak) would break byte-idempotence
-        if self.adaptive_k and self._commits_since_sweep > 0:
-            cumulative = np.asarray(to_global(versions, self._overflow),
-                                    np.int64)
+        wm_host = self.watermark()
+        with self.tracer.span("gc_sweep", watermark=wm_host) as sp:
+            wm = jnp.asarray(wm_host, jnp.int32)
+            versions, evicted = self._gc(self.store.versions, wm)
+            # the policy runs only when commits landed since the last
+            # sweep: a sweep is pure reclamation, so with nothing new
+            # committed the pressure/occupancy inputs are unchanged and
+            # rerunning the pass (or advancing the idle streak) would
+            # break byte-idempotence
+            if self.adaptive_k and self._commits_since_sweep > 0:
+                versions = self._run_policy(versions)
+            self.store = dataclasses.replace(self.store,
+                                             versions=versions)
+            evicted = int(evicted)
+            sp.note(reclaimed=evicted)
+        self.metrics.inc("engine/gc_sweeps")
+        self.metrics.inc("engine/gc_reclaimed", evicted)
+        return evicted
+
+    def _run_policy(self, versions):
+        """One adaptive-K ``reassign_k`` pass at the sweep boundary
+        (host-side; its own trace span — the policy is the sweep's
+        expensive part and worth separate attribution)."""
+        with self.tracer.span("reassign_k") as sp:
+            cumulative = np.asarray(
+                to_global(versions,
+                          self.metrics.peek("engine/ring_overwrote_rec")),
+                np.int64)
             if self.pressure_decay is None:
                 pressure = cumulative
             else:
@@ -343,6 +405,12 @@ class BohmEngine:
                                quantum=self.k_quantum)
             self._stable_idle = idle
             self._commits_since_sweep = 0
+            moved = reassign_stats(k_glob, new_k, self.k_quantum)
+            sp.note(**moved)
+            self.metrics.inc("engine/k_slots_granted",
+                             moved["slots_granted"])
+            self.metrics.inc("engine/k_slots_reclaimed",
+                             moved["slots_reclaimed"])
             k_sh = from_global(versions, jnp.asarray(new_k),
                                pad_value=self.k_min)
             # insertion cursors must stay inside the (possibly shrunk)
@@ -357,8 +425,7 @@ class BohmEngine:
                     versions.pages, head=versions.pages.head % k_sh)
                 versions = dataclasses.replace(versions, pages=prim,
                                                k_eff=k_sh)
-        self.store = dataclasses.replace(self.store, versions=versions)
-        return int(evicted)
+        return versions
 
     def k_by_record(self) -> jax.Array:
         """[R] effective primary-ring capacity per record (adaptive K)."""
@@ -371,7 +438,8 @@ class BohmEngine:
         the reader is released."""
         handle = SnapshotHandle(self._next_sid,
                                 self.current_ts() if ts is None
-                                else int(ts))
+                                else int(ts),
+                                t_wall=time.monotonic())
         self._next_sid += 1
         self._snapshots[handle.sid] = handle
         return handle
@@ -423,24 +491,26 @@ class BohmEngine:
                               jnp.asarray(int(ts), jnp.int32))
 
     # -- K-ring pressure diagnostics ---------------------------------------
-    def record_commit_metrics(self, metrics: Dict[str, jax.Array]) -> None:
-        """Accumulate per-record ring pressure from a commit's metrics
-        (called by run_batch and by TxnService for pipelined commits).
-        Live and dead evictions accumulate separately: only the live
-        histogram feeds the spill/adaptive-K policy."""
-        self._overflow = self._overflow + metrics["ring_overwrote_rec"]
-        self._overflow_dead = (self._overflow_dead
-                               + metrics["ring_overwrote_dead_rec"])
+    def record_commit_metrics(self, metrics: Dict[str, jax.Array],
+                              n_txns: int = 0) -> None:
+        """Fold a commit's metric outputs into the registry (called by
+        run_batch and by TxnService for pipelined commits). Every
+        accumulation is a lazy device-side add — an ``int()`` here would
+        join the host on every commit and serialize the scheduler's
+        dispatch-ahead pipeline; ``registry.snapshot()`` (or the legacy
+        stats surfaces) convert on demand. Live and dead evictions
+        accumulate separately: only the live histogram feeds the
+        spill/adaptive-K policy."""
+        m = self.metrics
+        for key in ("ring_overwrote_rec", "ring_overwrote_dead_rec",
+                    "ring_overwrote_live", "ring_overwrote_dead",
+                    "paged_alloc_failed", "aborts", "waves",
+                    *self._SPILL_KEYS):
+            if key in metrics:
+                m.accumulate(f"engine/{key}", metrics[key])
+        m.inc("engine/commits")
+        m.inc("engine/txns_committed", n_txns)
         self._commits_since_sweep += 1
-        if "paged_alloc_failed" in metrics:
-            self._paged_alloc_failed = (self._paged_alloc_failed
-                                        + metrics["paged_alloc_failed"])
-        # accumulate as device scalars — int() here would join the host
-        # on every commit and serialize the scheduler's dispatch-ahead
-        # pipeline; spill_stats() converts on demand
-        for k in self._spill_totals:
-            if k in metrics:
-                self._spill_totals[k] = self._spill_totals[k] + metrics[k]
 
     def overflow_by_record(self) -> jax.Array:
         """[R] cumulative count of LIVE version evictions per record —
@@ -449,7 +519,8 @@ class BohmEngine:
         the last reset. Dead evictions (no registered pin inside the
         version's window, end below the future-reader floor) are tracked
         separately — see ``overflow_stats``."""
-        return to_global(self.store.versions, self._overflow)
+        return to_global(self.store.versions,
+                         self.metrics.peek("engine/ring_overwrote_rec"))
 
     def overflow_stats(self, top_k: int = 8) -> Dict[str, object]:
         """Host-side K-ring pressure summary: total LIVE evictions, the
@@ -459,7 +530,8 @@ class BohmEngine:
         are split out under ``dead_*`` keys and never enter the live
         histogram. Diagnostic API — synchronises."""
         counts = self.overflow_by_record()
-        dead = to_global(self.store.versions, self._overflow_dead)
+        dead = to_global(self.store.versions,
+                         self.metrics.peek("engine/ring_overwrote_dead_rec"))
         k = min(top_k, self.num_records)
         top_vals, top_recs = jax.lax.top_k(counts, k)
         edges = [0, 1, 2, 4, 8, 16, 32, 64]
@@ -482,7 +554,8 @@ class BohmEngine:
         occupancy = 0 if spill is None else int(jnp.sum(spill.rec >= 0))
         capacity = 0 if spill is None else (
             self.n_shards * self.spill_buckets * self.spill_slots)
-        return dict({k: int(v) for k, v in self._spill_totals.items()},
+        return dict({k: int(self.metrics.value(f"engine/{k}"))
+                     for k in self._SPILL_KEYS},
                     spill_occupancy=occupancy, spill_capacity=capacity)
 
     def storage_stats(self) -> Dict[str, object]:
@@ -526,7 +599,8 @@ class BohmEngine:
                     total * self.page_slots * (2 + D)
                     + self.n_shards * versions.records_per_shard
                     * pages.max_pages),
-                "alloc_failed": int(self._paged_alloc_failed),
+                "alloc_failed": int(
+                    self.metrics.value("engine/paged_alloc_failed")),
             })
         else:
             stats.update({
@@ -534,6 +608,13 @@ class BohmEngine:
                 "physical_version_words": dense_slots * (2 + D),
             })
         return stats
+
+    def health(self) -> Dict[str, object]:
+        """MVCC health gauges (watermark lag, pin ages, ring/slab/spill
+        saturation, pressure percentiles) — derived from store state on
+        demand, one transfer. See ``repro.obs.health``. Diagnostic API —
+        synchronises."""
+        return engine_health(self)
 
 
 def _bucket_histogram(counts: jax.Array, edges: List[int]

@@ -16,6 +16,8 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro.obs.ewma import EwmaAnomaly
+
 
 class HeartbeatMonitor:
     def __init__(self, timeout_s: float = 300.0):
@@ -32,25 +34,35 @@ class HeartbeatMonitor:
 
 
 class StragglerDetector:
-    """EWMA of step time; flags steps exceeding threshold x the mean."""
+    """EWMA of step time; flags steps exceeding threshold x the mean.
+
+    The EWMA/threshold arithmetic lives in ``repro.obs.ewma.EwmaAnomaly``
+    (shared with the observability layer's phase-span anomaly flags);
+    this class keeps the step-indexed ``flagged`` list and the public
+    ``alpha`` / ``threshold`` / ``ewma`` / ``n`` attributes unchanged.
+    """
 
     def __init__(self, alpha: float = 0.1, threshold: float = 2.0):
         self.alpha = alpha
         self.threshold = threshold
-        self.ewma: Optional[float] = None
+        self._anomaly = EwmaAnomaly(alpha=alpha, threshold=threshold)
         self.flagged: List[int] = []
-        self.n = 0
+
+    @property
+    def ewma(self) -> Optional[float]:
+        return self._anomaly.baseline
+
+    @property
+    def n(self) -> int:
+        return self._anomaly.n
 
     def record(self, dt: float) -> bool:
-        self.n += 1
-        slow = self.ewma is not None and dt > self.threshold * self.ewma
+        # a straggling step should not drag the baseline up — flagged
+        # samples are excluded from the EWMA (EwmaAnomaly's contract)
+        slow = self._anomaly.record(dt)
         if slow:
             self.flagged.append(self.n)
-            # a straggling step should not drag the baseline up
-            return True
-        self.ewma = dt if self.ewma is None else \
-            (1 - self.alpha) * self.ewma + self.alpha * dt
-        return False
+        return slow
 
 
 @dataclasses.dataclass(frozen=True)

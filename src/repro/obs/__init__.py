@@ -1,0 +1,37 @@
+"""repro.obs — the zero-sync telemetry plane.
+
+Bohm's design keeps reads bookkeeping-free and writers off contended
+shared state; instrumentation must honor the same contract or it
+perturbs exactly what it measures. Three layers:
+
+``registry``  ``MetricsRegistry``: typed counters / gauges with
+              device-side array accumulation on the hot path (lazy adds
+              folded onto the jitted phases' metric outputs — no host
+              sync, no per-batch Python arithmetic on device values) and
+              ONE host transfer at ``snapshot()``. The engine's and
+              schedulers' legacy stats surfaces are views onto it.
+``trace``     ``PhaseTracer``: bounded-ring span instrumentation around
+              plan/exec/commit, gc_sweep, reassign_k and admission
+              decisions, fenced by ``block_until_ready`` only at span
+              close when tracing is ON (OFF = zero overhead, tested).
+              Exports Chrome ``trace_event`` JSON (Perfetto-loadable);
+              optional ``jax.profiler.TraceAnnotation`` passthrough.
+``health``    derived MVCC gauges computed from store state on demand:
+              watermark lag, pin ages, ring/slab/spill saturation,
+              pressure percentiles — ``BohmEngine.health()`` /
+              ``TxnService.health()``.
+
+``ewma`` (shared anomaly baselines) and ``meta`` (``run_metadata()``
+provenance stamping for benchmark artifacts) ride along.
+"""
+from repro.obs.ewma import Ewma, EwmaAnomaly
+from repro.obs.health import engine_health, service_health
+from repro.obs.meta import git_sha, run_metadata
+from repro.obs.registry import MetricsRegistry, MetricsView
+from repro.obs.trace import (NULL_SPAN, PhaseTracer, validate_chrome_trace)
+
+__all__ = [
+    "Ewma", "EwmaAnomaly", "MetricsRegistry", "MetricsView",
+    "NULL_SPAN", "PhaseTracer", "engine_health", "git_sha",
+    "run_metadata", "service_health", "validate_chrome_trace",
+]

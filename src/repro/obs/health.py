@@ -1,0 +1,102 @@
+"""MVCC health gauges: derived signals computed from store state on demand.
+
+The counters and spans tell you what HAPPENED; these gauges tell you how
+close the system is to its cliffs right NOW:
+
+  watermark lag        ts_counter - watermark: how much history every
+                       barrier must retain for the slowest reader;
+  oldest-pin age       the stalest registered snapshot, in timestamps and
+                       wall seconds — a leaked pin shows up here long
+                       before the rings saturate;
+  ring fill            per-record occupancy / k_eff percentiles — the
+                       found=False early warning (1.0 = next superseding
+                       write evicts live history);
+  slab / spill fill    per-shard page-slab and spill-pool saturation
+                       (``repro.store.sharded.store_health``);
+  pressure             live-eviction count percentiles — the adaptive-K
+                       policy's input distribution.
+
+Everything is computed on demand from the store, one ``jax.device_get``
+over the whole gauge tree — a diagnostic surface that synchronises when
+CALLED, and costs nothing when it isn't. ``BohmEngine.health()`` and
+``TxnService.health()`` are the public entry points.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+from repro.store import (ring_fill_fraction, store_health, store_occupancy,
+                         to_global)
+
+
+def _percentiles(x: np.ndarray, name: str, qs=(50, 90, 99)
+                 ) -> Dict[str, float]:
+    out = {}
+    for q in qs:
+        out[f"{name}_p{q}"] = float(np.percentile(x, q))
+    out[f"{name}_max"] = float(x.max()) if x.size else 0.0
+    return out
+
+
+def engine_health(engine) -> Dict[str, object]:
+    """One engine's MVCC health gauges (synchronises — diagnostic API).
+    ``engine`` is a ``repro.core.engine.BohmEngine``; duck-typed here to
+    keep the obs layer free of core imports."""
+    versions = engine.store.versions
+    now_ts = engine.current_ts()
+    wm = engine.watermark()
+    pins = sorted(s.ts for s in engine._snapshots.values())
+    walls = [s.t_wall for s in engine._snapshots.values() if s.t_wall > 0]
+
+    # one transfer for the whole device-side gauge tree
+    device = dict(store_health(versions))
+    device["_occ"] = store_occupancy(versions)
+    device["_k_eff"] = to_global(versions, versions.k_eff)
+    device["_pressure"] = engine.overflow_by_record()
+    host = jax.device_get(device)
+
+    R = engine.num_records
+    occ = np.asarray(host.pop("_occ"))[:R]
+    k_eff = np.asarray(host.pop("_k_eff"))[:R]
+    pressure = np.asarray(host.pop("_pressure"))[:R]
+    fill = np.asarray(ring_fill_fraction(occ, k_eff))
+
+    health: Dict[str, object] = {
+        "ts_counter": now_ts,
+        "watermark": wm,
+        "watermark_lag": max(0, engine._ts_next - wm),
+        "active_pins": len(pins),
+        "oldest_pin_ts": pins[0] if pins else None,
+        "oldest_pin_lag_ts": (now_ts - pins[0]) if pins else 0,
+        "oldest_pin_age_s": (round(time.monotonic() - min(walls), 6)
+                             if walls else 0.0),
+        "live_versions": int(occ.sum()),
+        "commits_since_sweep": engine._commits_since_sweep,
+    }
+    health.update(_percentiles(fill, "ring_fill"))
+    health.update(_percentiles(pressure.astype(np.float64), "pressure"))
+    for k, v in host.items():
+        v = np.asarray(v)
+        health[f"{k}_by_shard"] = [round(float(x), 6) for x in v.ravel()]
+    return health
+
+
+def service_health(service) -> Dict[str, object]:
+    """Engine health plus the scheduler plane: queue depths and the
+    admission window's observed occupancy (``service`` is a
+    ``repro.service.TxnService``)."""
+    health = engine_health(service.engine)
+    health.update({
+        "admission_queue_depth": len(service._admission),
+        "planned_epochs": len(service._planned),
+        "inflight_epochs": len(service._inflight),
+        "unclaimed_results": len(service._results),
+        "admission_window": service.admission_window,
+        "admission_window_occupancy_max":
+            service.stats["admission_window_occupancy"],
+    })
+    return health

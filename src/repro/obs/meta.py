@@ -1,0 +1,48 @@
+"""Run metadata stamping — the one shared provenance helper.
+
+Every benchmark JSON twin (``benchmarks.common.write_json``) and obs
+artifact carries the same ``meta`` block so result trajectories are
+comparable across environments: jax version, backend, device count, git
+SHA when the repo is available, and a wall timestamp. Failures to read
+git (no repo, no binary) degrade to ``None`` — metadata must never make
+a benchmark fail.
+"""
+from __future__ import annotations
+
+import platform
+import subprocess
+import time
+from pathlib import Path
+from typing import Dict, Optional
+
+import jax
+
+
+def git_sha(cwd: Optional[Path] = None) -> Optional[str]:
+    """Short commit SHA of the repo containing ``cwd`` (default: this
+    file), or None when unavailable."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=str(cwd or Path(__file__).resolve().parent),
+            capture_output=True, text=True, timeout=5)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else None
+    except (OSError, subprocess.SubprocessError):
+        return None
+
+
+def run_metadata(extra: Optional[Dict] = None) -> Dict[str, object]:
+    """The shared ``meta`` block: environment + provenance."""
+    meta: Dict[str, object] = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "git_sha": git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+    if extra:
+        meta.update(extra)
+    return meta

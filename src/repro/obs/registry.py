@@ -1,0 +1,177 @@
+"""MetricsRegistry: the unified, zero-sync telemetry store.
+
+Bohm's reads do no bookkeeping and its writers avoid contended shared
+synchronization — the same ethos applied to observability: nothing on the
+hot path may join the host. The registry therefore carries THREE typed
+metric kinds with different cost models:
+
+``device counters``  accumulated as lazy device-array adds folded onto the
+                     metric dicts the jitted phases already return (the
+                     same trick the engine used for its ad-hoc
+                     ``_overflow`` accumulators): ``accumulate(name, d)``
+                     enqueues ``total = total + d`` without realising
+                     anything. Scalars and per-record/per-shard vectors
+                     both work — a counter's shape is whatever the first
+                     delta's shape is (or the declared template's).
+``host counters``    plain Python ints for host-side decisions (scheduler
+                     admissions, merges, backpressure joins) — there is
+                     no device value to keep them on, and a Python ``+=``
+                     of an int costs nothing.
+``gauges``           callables evaluated only at ``snapshot()`` time —
+                     derived signals (occupancy fractions, watermark lag)
+                     that would be wasted work to maintain continuously.
+
+``snapshot()`` is the ONE host-transfer point: a single ``jax.device_get``
+of the whole device-counter tree (one sync covering every metric), then
+host counters and gauge evaluations merged in. ``peek()`` hands back the
+raw device array for callers composing further device-side arithmetic
+(e.g. the adaptive-K policy input) without any transfer.
+
+``view(prefix)`` adapts a namespace of host counters to a ``MutableMapping``
+so the legacy stats surfaces (``TxnService.stats``, the serving
+``scheduler.stats``) keep their exact dict semantics (``stats["x"] += 1``,
+``stats.update(...)``, iteration order = declaration order) while living
+on the shared registry.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, Iterator, List, MutableMapping, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._device: Dict[str, jax.Array] = {}
+        self._device_init: Dict[str, jax.Array] = {}
+        self._host: Dict[str, object] = {}
+        self._gauges: Dict[str, Callable[[], object]] = {}
+        # accumulate() may be called from scheduler callbacks on other
+        # threads in future multi-host work; the dict ops stay atomic
+        self._lock = threading.Lock()
+
+    # -- device counters (zero-sync accumulation) -------------------------
+    def declare(self, name: str, template: jax.Array) -> None:
+        """Declare a device counter with an explicit zero template (shape
+        + dtype). Re-declaring resets it to zero — ``reset_store`` style
+        lifecycle points re-declare rather than special-case."""
+        zero = jnp.zeros_like(template)
+        with self._lock:
+            self._device[name] = zero
+            self._device_init[name] = zero
+
+    def accumulate(self, name: str, delta: jax.Array) -> None:
+        """Device-side ``total += delta`` — a lazy add on the device
+        queue, no host sync. Undeclared names are declared by their first
+        delta (template = zeros_like(delta))."""
+        with self._lock:
+            cur = self._device.get(name)
+            if cur is None:
+                self._device_init[name] = jnp.zeros_like(delta)
+                self._device[name] = delta
+            else:
+                self._device[name] = cur + delta
+
+    def peek(self, name: str) -> jax.Array:
+        """The raw device accumulator (no transfer) — for callers doing
+        further device-side arithmetic on a counter."""
+        return self._device[name]
+
+    def reset(self, name: Optional[str] = None) -> None:
+        """Zero one device counter (or all of them) to its declared
+        template."""
+        with self._lock:
+            names = [name] if name is not None else list(self._device)
+            for n in names:
+                self._device[n] = self._device_init[n]
+
+    # -- host counters -----------------------------------------------------
+    def inc(self, name: str, n: object = 1) -> None:
+        self._host[name] = self._host.get(name, 0) + n
+
+    def set(self, name: str, value: object) -> None:
+        self._host[name] = value
+
+    def get(self, name: str, default: object = None) -> object:
+        return self._host.get(name, default)
+
+    # -- gauges (evaluated at snapshot only) -------------------------------
+    def register_gauge(self, name: str,
+                       fn: Callable[[], object]) -> None:
+        self._gauges[name] = fn
+
+    # -- the single host-transfer point ------------------------------------
+    def snapshot(self, include_gauges: bool = True) -> Dict[str, object]:
+        """Realise every metric on the host: ONE ``jax.device_get`` over
+        the whole device-counter tree, then host counters and gauge
+        evaluations. Scalar counters come back as Python ints/floats,
+        vector counters as numpy arrays."""
+        with self._lock:
+            device = dict(self._device)
+        host_vals = jax.device_get(device)      # one transfer, whole tree
+        out: Dict[str, object] = {}
+        for k, v in host_vals.items():
+            out[k] = v.item() if getattr(v, "ndim", 1) == 0 else v
+        out.update(self._host)
+        if include_gauges:
+            for k, fn in self._gauges.items():
+                out[k] = fn()
+        return out
+
+    def value(self, name: str) -> object:
+        """One metric's host value (syncs that metric only)."""
+        if name in self._device:
+            v = jax.device_get(self._device[name])
+            return v.item() if getattr(v, "ndim", 1) == 0 else v
+        if name in self._host:
+            return self._host[name]
+        return self._gauges[name]()
+
+    def names(self) -> List[str]:
+        return (list(self._device) + list(self._host)
+                + list(self._gauges))
+
+    # -- legacy dict adapters ----------------------------------------------
+    def view(self, prefix: str = "") -> "MetricsView":
+        return MetricsView(self, prefix)
+
+
+class MetricsView(MutableMapping):
+    """A ``MutableMapping`` over one prefix-namespace of a registry's
+    HOST counters — the adapter that lets ``TxnService.stats`` and the
+    serving ``scheduler.stats`` keep their historical dict API while the
+    values live on the shared registry. Iteration order is insertion
+    (declaration) order, exactly as the dicts it replaces."""
+
+    def __init__(self, registry: MetricsRegistry, prefix: str = ""):
+        self._registry = registry
+        self._prefix = prefix
+
+    def _key(self, key: str) -> str:
+        return self._prefix + key
+
+    def __getitem__(self, key: str) -> object:
+        full = self._key(key)
+        if full not in self._registry._host:
+            raise KeyError(key)
+        return self._registry._host[full]
+
+    def __setitem__(self, key: str, value: object) -> None:
+        self._registry._host[self._key(key)] = value
+
+    def __delitem__(self, key: str) -> None:
+        del self._registry._host[self._key(key)]
+
+    def __iter__(self) -> Iterator[str]:
+        p = self._prefix
+        for k in self._registry._host:
+            if k.startswith(p):
+                yield k[len(p):]
+
+    def __len__(self) -> int:
+        return sum(1 for _ in self)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))

@@ -56,11 +56,20 @@ from typing import Deque, Dict, Iterable, List, Optional
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.engine import BohmEngine, SnapshotHandle
 from repro.core.plan import (MAX_BATCH_TXNS, BatchFootprint,
                              batch_footprint, footprints_conflict,
                              merge_batches, merge_footprints)
 from repro.core.txn import TxnBatch
+from repro.obs import service_health
+
+
+def _popcount(bits) -> int:
+    """Footprint cardinality (records touched) — traced-decision args
+    only, never on the untraced hot path."""
+    return int(np.unpackbits(np.asarray(bits).view(np.uint8)).sum())
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,15 +126,22 @@ class TxnService:
         # max_inflight bound counts epochs, not batches
         self._inflight: Deque[List[int]] = deque()
         self._results: Dict[int, BatchResult] = {}
-        self.stats = {"submitted": 0, "planned_ahead_max": 0,
-                      "backpressure_joins": 0,
-                      # scheduler decisions (conflict-aware admission)
-                      "merged_batches": 0,       # batches folded into a
-                      #                            preceding epoch
-                      "overlapped_execs": 0,     # exec(b+1) dispatched
-                      #                            before commit(b)
-                      "admission_window_occupancy": 0}  # max batches seen
-        #                                          by one window scan
+        # stats live in the engine's registry under the "service/"
+        # namespace — same keys / same mutation sites as the legacy dict,
+        # but visible to snapshot()/obs_report alongside engine counters
+        self.metrics = engine.metrics
+        self.tracer = engine.tracer
+        self.stats = engine.metrics.view("service/")
+        for key in ("submitted", "planned_ahead_max",
+                    "backpressure_joins",
+                    # scheduler decisions (conflict-aware admission):
+                    # merged_batches = batches folded into a preceding
+                    # epoch; overlapped_execs = exec(b+1) dispatched
+                    # before commit(b); admission_window_occupancy =
+                    # max batches seen by one window scan
+                    "merged_batches", "overlapped_execs",
+                    "admission_window_occupancy"):
+            self.stats[key] = 0
 
     @property
     def conflict_aware(self) -> bool:
@@ -193,6 +209,11 @@ class TxnService:
         jax.block_until_ready(self.engine.store.base)
         self._inflight.clear()
         self._results.clear()
+
+    def health(self) -> Dict[str, object]:
+        """Engine MVCC health gauges plus scheduler queue depths and
+        admission-window occupancy (synchronises — diagnostic API)."""
+        return service_health(self)
 
     # -- snapshot API (delegates to the engine; correctness notes) ---------
     def begin_snapshot(self, ts: Optional[int] = None) -> SnapshotHandle:
@@ -276,7 +297,10 @@ class TxnService:
             # them is safe (see repro/store/ring.py liveness notes).
             wm = eng.watermark()
             pins = eng.pin_array()
-            plan = eng._plan(batch, jnp.asarray(ts_base, jnp.int32))
+            with self.tracer.span("plan_phase", txns=batch.size,
+                                  epoch_batches=len(tickets)) as sp:
+                plan = sp.fence(
+                    eng._plan(batch, jnp.asarray(ts_base, jnp.int32)))
             eng._ts_next += batch.size
             self._planned.append(_Planned(tickets, sizes, batch, fp,
                                           plan, ts_base, wm, pins))
@@ -298,14 +322,29 @@ class TxnService:
         tickets, sizes = [head.ticket], [head.batch.size]
         batch, fp = head.batch, head.footprint
         scanned = 1
-        while (self._admission and scanned < self.admission_window
-               and self._can_merge(batch, fp, self._admission[0])):
+        while self._admission and scanned < self.admission_window:
+            if not self._can_merge(batch, fp, self._admission[0]):
+                if self.tracer.enabled and fp is not None:
+                    nfp = self._admission[0].footprint
+                    self.tracer.instant(
+                        "admission_fallback",
+                        epoch_batches=len(tickets),
+                        epoch_records=_popcount(fp.rw_bits),
+                        next_records=(_popcount(nfp.rw_bits)
+                                      if nfp is not None else -1))
+                break
             nxt = self._admission.popleft()
             batch = merge_batches(batch, nxt.batch)
             fp = merge_footprints(fp, nxt.footprint)
             tickets.append(nxt.ticket)
             sizes.append(nxt.batch.size)
             self.stats["merged_batches"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admission_merge",
+                    epoch_batches=len(tickets),
+                    merged_records=_popcount(nxt.footprint.rw_bits),
+                    epoch_records=_popcount(fp.rw_bits))
             scanned += 1
         return tickets, sizes, batch, fp
 
@@ -334,7 +373,9 @@ class TxnService:
             return False
         eng = self.engine
         e1 = self._planned.popleft()
-        w1, r1, m1 = eng._exec(e1.plan, e1.batch, eng.store)
+        with self.tracer.span("exec_phase", txns=e1.size) as sp:
+            w1, r1, m1 = eng._exec(e1.plan, e1.batch, eng.store)
+            sp.fence(r1)
         e2 = None
         if (self.pipelined and self.conflict_aware and self._planned
                 and e1.footprint is not None
@@ -342,8 +383,17 @@ class TxnService:
                 and not footprints_conflict(e1.footprint,
                                             self._planned[0].footprint)):
             e2 = self._planned.popleft()
-            w2, r2, m2 = eng._exec(e2.plan, e2.batch, eng.store)
+            with self.tracer.span("exec_phase", txns=e2.size,
+                                  overlapped=True) as sp:
+                w2, r2, m2 = eng._exec(e2.plan, e2.batch, eng.store)
+                sp.fence(r2)
             self.stats["overlapped_execs"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admission_overlap",
+                    epoch1_txns=e1.size, epoch2_txns=e2.size,
+                    epoch1_records=_popcount(e1.footprint.rw_bits),
+                    epoch2_records=_popcount(e2.footprint.rw_bits))
         self._commit_epoch(e1, w1, r1, m1)
         if e2 is not None:
             self._commit_epoch(e2, w2, r2, m2)
@@ -357,12 +407,15 @@ class TxnService:
         eng = self.engine
         window = (jnp.asarray(e.ts_base, jnp.int32),
                   jnp.asarray(e.ts_base + e.size, jnp.int32))
-        store, ring_metrics = eng._commit(
-            e.plan, e.batch, eng.store, w_data,
-            jnp.asarray(e.watermark, jnp.int32), window, e.pin_ts)
-        eng.store = store
+        with self.tracer.span("commit_phase", txns=e.size,
+                              epoch_batches=len(e.tickets)) as sp:
+            store, ring_metrics = eng._commit(
+                e.plan, e.batch, eng.store, w_data,
+                jnp.asarray(e.watermark, jnp.int32), window, e.pin_ts)
+            eng.store = store
+            sp.fence(store.base)
         metrics = dict(exec_metrics, **ring_metrics)
-        eng.record_commit_metrics(metrics)
+        eng.record_commit_metrics(metrics, n_txns=e.size)
         off = 0
         for ticket, size in zip(e.tickets, e.sizes):
             rv = read_vals if len(e.tickets) == 1 \

@@ -28,6 +28,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import MetricsRegistry
+
 
 @dataclasses.dataclass
 class Request:
@@ -52,7 +54,8 @@ class StepPlan:
 
 class BohmScheduler:
     def __init__(self, *, slots: int, num_pages: int, page_size: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int,
+                 registry: Optional[MetricsRegistry] = None):
         self.slots = slots
         self.page_size = page_size
         self.num_pages = num_pages
@@ -71,8 +74,14 @@ class BohmScheduler:
         # (never recycled); eviction under pool pressure is out of scope.
         self.prefix_cache: Dict[bytes, List[int]] = {}
         self.cached_pages: set = set()
-        self.stats = {"admitted": 0, "completed": 0, "prefix_hits": 0,
-                      "pages_recycled": 0}
+        # stats live under "serving/" in a MetricsRegistry (shared with
+        # an engine's when one is passed in) — same keys / mutation sites
+        # as the legacy dict
+        self.metrics = registry or MetricsRegistry()
+        self.stats = self.metrics.view("serving/")
+        for key in ("admitted", "completed", "prefix_hits",
+                    "pages_recycled"):
+            self.stats[key] = 0
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:

@@ -27,28 +27,33 @@ from repro.store.pages import (PageSlab, commit_paged, free_page_count,
                                gather_windows_paged, gc_pages,
                                init_page_slab, mapped_page_count,
                                mask_gathered_windows, page_owner_index,
-                               paged_occupancy)
-from repro.store.policy import decay_pressure, reassign_k
+                               paged_occupancy, slab_fill_fraction)
+from repro.store.policy import decay_pressure, reassign_k, reassign_stats
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, init_ring,
-                              pin_stabbed, ring_occupancy)
+                              pin_stabbed, ring_fill_fraction,
+                              ring_occupancy)
 from repro.store.sharded import (ShardedVersionStore, commit_sharded,
                                  from_global, gather_windows_sharded,
                                  gc_sharded, global_record_ids,
                                  init_sharded_store, resolve_sharded,
-                                 store_occupancy, to_global, unshard)
+                                 store_health, store_occupancy, to_global,
+                                 unshard)
 from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
-                               spill_commit, spill_occupancy)
+                               spill_commit, spill_fill_fraction,
+                               spill_occupancy)
 
 __all__ = [
     "INF_TS", "VersionRing", "commit_versions", "gather_windows",
     "gc_ring", "init_ring", "pin_stabbed", "ring_occupancy",
     "ShardedVersionStore", "commit_sharded", "from_global",
     "gather_windows_sharded", "gc_sharded", "global_record_ids",
-    "init_sharded_store", "resolve_sharded", "store_occupancy",
-    "to_global", "unshard", "SpillPool", "gc_spill", "init_spill_pool",
-    "spill_commit", "spill_occupancy", "reassign_k", "decay_pressure",
+    "init_sharded_store", "resolve_sharded", "store_health",
+    "store_occupancy", "to_global", "unshard", "SpillPool", "gc_spill",
+    "init_spill_pool", "spill_commit", "spill_fill_fraction",
+    "spill_occupancy", "reassign_k", "reassign_stats", "decay_pressure",
     "PageSlab", "commit_paged", "free_page_count", "gather_windows_paged",
     "gc_pages", "init_page_slab", "mapped_page_count",
     "mask_gathered_windows", "page_owner_index", "paged_occupancy",
+    "ring_fill_fraction", "slab_fill_fraction",
 ]

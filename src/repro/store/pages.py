@@ -143,6 +143,13 @@ def free_page_count(slab: PageSlab) -> jax.Array:
     return jnp.int32(slab.num_pages) - mapped_page_count(slab)
 
 
+def slab_fill_fraction(slab: PageSlab) -> jax.Array:
+    """[] mapped fraction of the slab in [0, 1] — the allocator
+    saturation gauge (at 1.0 the free list is empty and further version
+    placements fail, degrading historical reads to found=False)."""
+    return mapped_page_count(slab) / jnp.float32(max(slab.num_pages, 1))
+
+
 def paged_occupancy(slab: PageSlab) -> jax.Array:
     """[R] live (non-garbage) version count per record — the paged twin
     of ``ring_occupancy``."""

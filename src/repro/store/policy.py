@@ -182,3 +182,21 @@ def reassign_k(pressure: np.ndarray, k_eff: np.ndarray, *,
     assert int(new_k.sum()) == int(k.sum())
     assert new_k.min() >= k_min and new_k.max() <= k_max
     return new_k.astype(np.int32)
+
+
+def reassign_stats(old_k: np.ndarray, new_k: np.ndarray,
+                   quantum: int = 1) -> dict:
+    """Host-side summary of one ``reassign_k`` pass — what the policy
+    actually moved. The engine records this into the metrics registry
+    and attaches it to the ``reassign_k`` trace span, so capacity churn
+    is observable without re-deriving it from ring state."""
+    old = np.asarray(old_k, np.int64)
+    new = np.asarray(new_k, np.int64)
+    d = new - old
+    return {
+        "slots_granted": int(d[d > 0].sum()),
+        "slots_reclaimed": int(-d[d < 0].sum()),
+        "records_grown": int((d > 0).sum()),
+        "records_shrunk": int((d < 0).sum()),
+        "quantum": int(quantum),
+    }

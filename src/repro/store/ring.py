@@ -105,6 +105,16 @@ def ring_occupancy(ring: VersionRing) -> jax.Array:
     return jnp.sum(ring.begin != INF_TS, axis=-1).astype(jnp.int32)
 
 
+def ring_fill_fraction(occupancy: jax.Array,
+                       k_eff: jax.Array) -> jax.Array:
+    """Per-record ring pressure in [0, 1]: live versions over effective
+    capacity. 1.0 means the next superseding write evicts history —
+    the distribution's upper percentiles are the obs layer's early
+    warning for found=False exposure (works elementwise on [R] or
+    stacked [n, Rl] inputs)."""
+    return occupancy / jnp.maximum(k_eff, 1).astype(jnp.float32)
+
+
 def gather_windows(ring: VersionRing, records: jax.Array
                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Pre-gather per-read candidate windows for ``mvcc_resolve``:

@@ -46,11 +46,13 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.store.pages import (PageSlab, commit_paged, gather_windows_paged,
                                gc_pages, init_page_slab,
-                               mask_gathered_windows, paged_occupancy)
+                               mask_gathered_windows, paged_occupancy,
+                               slab_fill_fraction)
 from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, gc_ring, ring_occupancy)
 from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
-                               spill_buckets_for, spill_commit)
+                               spill_buckets_for, spill_commit,
+                               spill_fill_fraction, spill_occupancy)
 
 PAD_KEY = jnp.uint32(0xFFFFFFFF)
 
@@ -252,6 +254,33 @@ def store_occupancy(store: ShardedVersionStore) -> jax.Array:
     if store.rings is not None:
         return to_global(store, ring_occupancy(store.rings))
     return to_global(store, jax.vmap(paged_occupancy)(store.pages))
+
+
+def store_health(store: ShardedVersionStore) -> Dict[str, jax.Array]:
+    """Per-shard health gauges as LAZY device values — nothing here
+    synchronises; the obs layer's single snapshot transfer (or an
+    explicit ``health()`` call) realises the whole dict at once.
+
+      live_versions [n]   live version count per shard
+      k_eff_slots   [n]   effective (policy-granted) slot capacity
+      pages_mapped / pages_free / slab_fill [n]  (paged stores)
+      spill_occupancy / spill_fill [n]           (spill tier attached)
+    """
+    out: Dict[str, jax.Array] = {"k_eff_slots": jnp.sum(store.k_eff, -1)}
+    if store.rings is not None:
+        out["live_versions"] = jnp.sum(ring_occupancy(store.rings), -1)
+    else:
+        out["live_versions"] = jnp.sum(
+            jax.vmap(paged_occupancy)(store.pages), -1)
+        mapped = jnp.sum(store.pages.page_table >= 0, axis=(1, 2))
+        out["pages_mapped"] = mapped.astype(jnp.int32)
+        out["pages_free"] = (store.pages.num_pages
+                             - mapped).astype(jnp.int32)
+        out["slab_fill"] = jax.vmap(slab_fill_fraction)(store.pages)
+    if store.spill is not None:
+        out["spill_occupancy"] = jax.vmap(spill_occupancy)(store.spill)
+        out["spill_fill"] = jax.vmap(spill_fill_fraction)(store.spill)
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -79,6 +79,14 @@ def spill_occupancy(pool: SpillPool) -> jax.Array:
     return jnp.sum(pool.rec >= 0).astype(jnp.int32)
 
 
+def spill_fill_fraction(pool: SpillPool) -> jax.Array:
+    """[] occupied fraction of the pool in [0, 1] — the saturation gauge
+    the obs layer surfaces (a full pool means live evictions start
+    overwriting pinned history / dropping, i.e. found=False exposure)."""
+    cap = pool.num_buckets * pool.num_slots
+    return spill_occupancy(pool) / jnp.float32(max(cap, 1))
+
+
 def spill_buckets_for(records: jax.Array, num_buckets: int) -> jax.Array:
     """Bucket index of each (shard-local) record id — the one home of the
     spill hash so commit and resolve can never disagree."""
