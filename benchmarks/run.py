@@ -19,6 +19,9 @@
               slab occupancy, the paged commit tax
   kernels     Pallas kernels vs jnp oracles (interpret-mode wall times)
   serving     Bohm-MVCC paged KV serving engine step latency
+  arena       cross-protocol arena: all five protocols over the full
+              workload matrix at matched batch sizes + anomaly gauntlet
+              (headline claim + serializability verdicts in one twin)
 
 Roofline terms for the 40 (arch x shape) cells come from the dry-run
 artifact (see repro/launch/dryrun.py and repro/launch/roofline.py) and are
@@ -94,6 +97,11 @@ def bench_serving():
     serving.run()
 
 
+def bench_arena(quick: bool = False):
+    from benchmarks import arena
+    arena.run(quick=quick)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -101,7 +109,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: microbench,ycsb,"
                          "smallbank,snapshot,pipeline,admission,spill,"
-                         "paged,kernels,serving")
+                         "paged,kernels,serving,arena")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -138,6 +146,10 @@ def main() -> None:
     if want("serving"):
         print("== serving ==", flush=True)
         bench_serving()
+    if want("arena"):
+        print("== arena (cross-protocol matrix + gauntlet) ==",
+              flush=True)
+        bench_arena(args.quick)
 
 
 if __name__ == "__main__":

@@ -2,66 +2,58 @@
 9 (read-only Balance mix), 10 (read-only vs contention).
 
 Contention is controlled by the number of customers (fewer customers =
-hotter accounts). The paper's headline: under high contention Bohm ~2x 2PL
-on the full mix, and on the read-only mix 2PL *collapses* from lock-manager
-latch contention while Bohm's reads (which never write shared memory) keep
-scaling. Latch contention has no analogue on this substrate — the
-structural signal is 2PL's round count staying at 1 while its lock-table
-segment reductions still serialize hot buckets; see EXPERIMENTS.md.
+hotter accounts). Driven through the arena's ``ProtocolEngine`` adapters:
+all five protocols (plus the conflict-aware Bohm scheduler) stream the
+same seeded batches per cell, long-format rows with committed throughput,
+abort rate, native proxies and the serializability verdict, written as
+the PR-standard JSON twin via ``benchmarks.common.write_csv``. Stores
+start at balance 1000 so TransactSaving's overdraft-abort branch stays
+live (the workload-logic abort path, distinct from CC aborts).
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_fn, write_csv
-from repro.core.baselines import run_2pl
-from repro.core.engine import BohmEngine
+from benchmarks.common import write_csv
+from repro.arena import ArenaCell, make_protocols, run_cell
 from repro.core.workloads import gen_smallbank_batch, make_smallbank
+from repro.obs import MetricsRegistry
 
 BATCH = 2048
+N_BATCHES = 4
 FULL_MIX = (0.2, 0.2, 0.2, 0.2, 0.2)
 BALANCE_ONLY = (1.0, 0.0, 0.0, 0.0, 0.0)
 
 
-def bench_cell(n_customers: int, mix, label: str, rng) -> dict:
-    wl = make_smallbank()
-    n_records = 2 * n_customers
-    batch = gen_smallbank_batch(rng, BATCH, n_customers, mix=mix)
-    eng = BohmEngine(max(n_records, 2), wl)
-    eng.reset_store(jnp.full((max(n_records, 2), wl.payload_words),
-                             1000, jnp.int32))
-    _, metrics = eng.run_batch(batch)
-    t_bohm = time_fn(eng._step, eng.store, batch, warmup=1, iters=3)
-
-    base = jnp.full((max(n_records, 2), wl.payload_words), 1000, jnp.int32)
-    f2pl = jax.jit(functools.partial(run_2pl, workload=wl,
-                                     num_records=max(n_records, 2)))
-    _, _, m2 = f2pl(base, batch)
-    t_2pl = time_fn(f2pl, base, batch, warmup=0, iters=3)
-
-    return {
-        "mix": label, "customers": n_customers,
-        "bohm_txn_s": round(BATCH / t_bohm),
-        "bohm_waves": int(metrics["waves"]),
-        "bohm_aborts": int(metrics["aborts"]),
-        "tpl_txn_s": round(BATCH / t_2pl),
-        "tpl_rounds": int(m2["rounds"]),
-    }
+def bench_cell(n_customers: int, mix, label: str, rng, protos,
+               base) -> list:
+    n_records = max(2 * n_customers, 2)
+    cell = ArenaCell(
+        f"smallbank-{label}-c{n_customers}", "smallbank", n_records,
+        [gen_smallbank_batch(rng, BATCH, n_customers, mix=mix)
+         for _ in range(N_BATCHES)], mix=label)
+    rows = run_cell(cell, protos, iters=2, base=base)
+    for r in rows:
+        r["customers"] = n_customers
+    return rows
 
 
 def run(sweep_customers: bool = True) -> list:
     rng = np.random.default_rng(13)
+    registry = MetricsRegistry()
     rows = []
-    rows.append(bench_cell(100, FULL_MIX, "full", rng))       # Fig 8
-    rows.append(bench_cell(100, BALANCE_ONLY, "balance", rng))  # Fig 9
-    if sweep_customers:                                        # Fig 10
-        for n in (25, 1000, 10_000, 100_000):
-            rows.append(bench_cell(n, BALANCE_ONLY, "balance", rng))
-            rows.append(bench_cell(n, FULL_MIX, "full", rng))
+    sizes = [100] + ([25, 1000, 10_000, 100_000] if sweep_customers
+                     else [])
+    for n in sizes:
+        # one protocol set per store size (shapes change with R)
+        protos = make_protocols(max(2 * n, 2), make_smallbank(), registry)
+        # accounts start at 1000 (paper setup): overdraft aborts stay rare
+        # but reachable
+        base = jnp.full((max(2 * n, 2), 2), 1000, jnp.int32)
+        rows.extend(bench_cell(n, FULL_MIX, "full", rng, protos, base))
+        rows.extend(bench_cell(n, BALANCE_ONLY, "balance", rng, protos,
+                               base))
     write_csv("smallbank", rows)
     return rows
 

@@ -41,6 +41,16 @@ BENCH_TABLES = {
               ["config", "phys_slots", "phys_kwords", "found_rate",
                "found_vs_budget", "txn_s", "txn_s_vs_budget",
                "pages_mapped", "pages_free", "alloc_failed"]),
+    "arena": ("arena — cross-protocol matrix + anomaly gauntlet "
+              "(committed txn/s, MVSG verdicts)",
+              ["cell", "protocol", "txn_s", "abort_rate", "verdict",
+               "as_expected", "proxy"]),
+    "ycsb": ("ycsb — Figs 5-7 via arena adapters (committed txn/s)",
+             ["cell", "protocol", "theta", "mix", "txn_s", "abort_rate",
+              "verdict", "proxy"]),
+    "smallbank": ("smallbank — Figs 8-10 via arena adapters",
+                  ["cell", "protocol", "customers", "mix", "txn_s",
+                   "abort_rate", "verdict", "proxy"]),
 }
 
 

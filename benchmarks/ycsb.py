@@ -1,83 +1,52 @@
 """YCSB benchmark — paper §5.2, Figures 5 (low contention), 6 (theta=0.9),
-7 (2RMW-8R vs theta). Bohm vs single-version 2PL (+ SI / OCC context).
+7 (2RMW-8R vs theta). Bohm vs 2PL / Hekaton / OCC / SI.
 
-1M records; transactions are 10RMW or 2RMW-8R over unique records.
-Reported per configuration:
-  wall-clock txns/s on this substrate (relative trends are the deliverable),
-  waves   (Bohm: read-dependency critical path — never grows with ww),
-  rounds  (2PL: lock-conflict critical path),
-  aborts  (OCC / SI).
+Driven through the arena's ``ProtocolEngine`` adapters
+(``repro.arena.protocols``): every protocol streams the same seeded
+batches at matched batch size, rows are long-format (one per
+cell x protocol) with committed throughput, abort rate, native cost
+proxies and the tag-replay serializability verdict, written as the
+PR-standard JSON twin (``{"meta": ..., "rows": [...]}``) via
+``benchmarks.common.write_csv``.
 """
 from __future__ import annotations
 
-import functools
-
-import jax
 import numpy as np
 
-from benchmarks.common import time_fn, write_csv
-from repro.core.baselines import run_2pl, run_hekaton, run_occ, run_si
-from repro.core.engine import BohmEngine
-from repro.core.execute import init_store
+from benchmarks.common import write_csv
+from repro.arena import ArenaCell, make_protocols, run_cell
 from repro.core.workloads import gen_ycsb_batch, make_ycsb
+from repro.obs import MetricsRegistry
 
-N_RECORDS = 1_000_000
+N_RECORDS = 262_144
 BATCH = 1024
+N_BATCHES = 4
 PAYLOAD_WORDS = 8          # 32B payload stand-in for YCSB's 1000B records
 
 
-def bench_cell(theta: float, mix: str, rng) -> dict:
-    wl = make_ycsb(payload_words=PAYLOAD_WORDS)
-    batch = gen_ycsb_batch(rng, BATCH, N_RECORDS, theta=theta, mix=mix)
-    eng = BohmEngine(N_RECORDS, wl)
-    reads, metrics = eng.run_batch(batch)       # compile + metrics
-    waves = int(metrics["waves"])
-    t_bohm = time_fn(eng._step, eng.store, batch, warmup=1, iters=2)
-
-    base = init_store(N_RECORDS, wl.payload_words).base
-    f2pl = jax.jit(functools.partial(run_2pl, workload=wl,
-                                     num_records=N_RECORDS))
-    _, _, m2 = f2pl(base, batch)
-    rounds = int(m2["rounds"])
-    t_2pl = time_fn(f2pl, base, batch, warmup=0, iters=2)
-
-    fhek = jax.jit(functools.partial(run_hekaton, workload=wl,
-                                     num_records=N_RECORDS))
-    _, _, mh = fhek(base, batch)
-    t_hek = time_fn(fhek, base, batch, warmup=0, iters=2)
-
-    focc = jax.jit(functools.partial(run_occ, workload=wl,
-                                     num_records=N_RECORDS))
-    _, _, mo = focc(base, batch)
-    fsi = jax.jit(functools.partial(run_si, workload=wl,
-                                    num_records=N_RECORDS))
-    _, _, ms = fsi(base, batch)
-    t_occ = time_fn(focc, base, batch, warmup=0, iters=2)
-    t_si = time_fn(fsi, base, batch, warmup=1, iters=2)
-
-    return {
-        "mix": mix, "theta": theta,
-        "bohm_txn_s": round(BATCH / t_bohm), "bohm_waves": waves,
-        "tpl_txn_s": round(BATCH / t_2pl), "tpl_rounds": rounds,
-        "hek_txn_s": round(BATCH / t_hek),
-        "hek_rounds": int(mh["rounds"]),
-        "hek_read_bumps": int(mh["read_counter_bumps"]),
-        "occ_txn_s": round(BATCH / t_occ), "occ_aborts": int(mo["aborts"]),
-        "si_txn_s": round(BATCH / t_si), "si_aborts": int(ms["aborts"]),
-    }
-
-
-def run(sweep_theta: bool = True) -> list:
+def run(sweep_theta: bool = True, num_records: int = N_RECORDS,
+        batch: int = BATCH, payload_words: int = PAYLOAD_WORDS) -> list:
     rng = np.random.default_rng(7)
-    rows = []
+    registry = MetricsRegistry()
+    protos = make_protocols(num_records,
+                            make_ycsb(payload_words=payload_words),
+                            registry)
+
     # Fig 5 (low contention) + Fig 6 (high contention)
-    for theta in (0.0, 0.9):
-        for mix in ("10rmw", "2rmw8r"):
-            rows.append(bench_cell(theta, mix, rng))
-    # Fig 7: 2RMW-8R vs theta
-    if sweep_theta:
-        for theta in (0.5, 0.7, 0.8, 0.95, 0.99):
-            rows.append(bench_cell(theta, "2rmw8r", rng))
+    points = [(theta, mix) for theta in (0.0, 0.9)
+              for mix in ("10rmw", "2rmw8r")]
+    if sweep_theta:                       # Fig 7: 2RMW-8R vs theta
+        points += [(theta, "2rmw8r")
+                   for theta in (0.5, 0.7, 0.8, 0.95, 0.99)]
+
+    rows = []
+    for theta, mix in points:
+        cell = ArenaCell(
+            f"ycsb-{mix}-z{theta:g}", "ycsb", num_records,
+            [gen_ycsb_batch(rng, batch, num_records, theta=theta,
+                            mix=mix) for _ in range(N_BATCHES)],
+            theta=theta, mix=mix)
+        rows.extend(run_cell(cell, protos, iters=2))
     write_csv("ycsb", rows)
     return rows
 

@@ -1,0 +1,332 @@
+"""The arena: every protocol over the full workload matrix, one runner.
+
+A matrix cell is a reproducible batch stream (generator seeded per cell)
+drawn from the paper's experiment space — YCSB uniform/zipfian at swept
+theta, SmallBank, disjoint/mixed update streams, pinned snapshot scans —
+at MATCHED batch sizes across protocols. For each (cell, protocol) the
+runner produces one row:
+
+  throughput   committed txn/s over the streamed batches (best of
+               ``iters`` timed passes after an untimed compile pass);
+               GOODPUT — SI's permanently aborted txns don't count;
+  abort rate   protocol-native accounting (OCC validation failures, SI
+               first-committer-wins losers; 0 by construction for Bohm,
+               2PL, Hekaton);
+  verdict      ``serial-equivalent`` or ``NON-SERIALIZABLE(...)`` from
+               the tag-replay MVSG certifier (``repro.arena.anomalies``):
+               the same batch stream re-run under the tag workload
+               through the same protocol adapter, each batch's
+               multiversion serialization graph checked for cycles and
+               the final committed state cross-checked;
+  proxies      the protocol's native cost counters for the cell, via the
+               shared ``repro.obs.MetricsRegistry``.
+
+Cells sharing tensor shapes (R, T, Rd, W, D) share one protocol set —
+adapters are reset between cells, never recompiled.
+
+``run_gauntlet`` drives the anomaly scenarios through every protocol
+(scenarios run tag semantics directly — their meaning is purely
+structural) plus the adversarial-interleaving SI interpreter; the paper's
+claim lands as data: SI is the only protocol flagged, and only on the
+anomaly scenarios.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.arena import anomalies
+from repro.arena.anomalies import (Scenario, certify, default_scenarios,
+                                   run_si_schedule, tag_batch)
+from repro.arena.protocols import (PROTOCOL_NAMES, ProtocolEngine,
+                                   make_protocols)
+from repro.core.txn import TxnBatch, make_batch
+from repro.core.workloads import (gen_scan_batch, gen_smallbank_batch,
+                                  gen_ycsb_batch, make_smallbank,
+                                  make_ycsb)
+from repro.obs import MetricsRegistry
+
+YCSB_OPS = 10
+HOT_SET = 64          # mixed-stream hot-set size
+HOT_FRAC = 0.25       # fraction of mixed-stream txns hitting the hot set
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaCell:
+    """One workload point: a named, seeded batch stream. ``scans[i]``
+    (optional) is a read-only batch interleaved after update batch i —
+    the pinned-snapshot scan scenario."""
+    name: str
+    kind: str                      # ycsb | smallbank | stream | scan
+    num_records: int
+    batches: Sequence[TxnBatch]
+    theta: float = 0.0
+    mix: str = "-"
+    scans: Sequence[TxnBatch] = ()
+
+    @property
+    def total_txns(self) -> int:
+        return sum(b.size for b in self.batches)
+
+
+def _shift(batch: TxnBatch, offset: int) -> TxnBatch:
+    """Shift every valid record id by ``offset`` (stripe placement)."""
+    rs = np.asarray(batch.read_set)
+    ws = np.asarray(batch.write_set)
+    return make_batch(np.where(rs >= 0, rs + offset, rs),
+                      np.where(ws >= 0, ws + offset, ws),
+                      np.asarray(batch.txn_type), np.asarray(batch.args))
+
+
+def _mixed_batch(rng: np.random.Generator, n_txns: int,
+                 num_records: int) -> TxnBatch:
+    """Hot/cold update stream: HOT_FRAC of txns do 10RMW inside a
+    HOT_SET-record hot set, the rest run uniform over the cold range."""
+    n_hot = int(n_txns * HOT_FRAC)
+    hot = gen_ycsb_batch(rng, n_hot, HOT_SET, theta=0.0, mix="10rmw")
+    cold = _shift(gen_ycsb_batch(rng, n_txns - n_hot,
+                                 num_records - HOT_SET,
+                                 theta=0.0, mix="10rmw"), HOT_SET)
+    return make_batch(
+        np.concatenate([np.asarray(hot.read_set),
+                        np.asarray(cold.read_set)]),
+        np.concatenate([np.asarray(hot.write_set),
+                        np.asarray(cold.write_set)]),
+        np.concatenate([np.asarray(hot.txn_type),
+                        np.asarray(cold.txn_type)]),
+        np.concatenate([np.asarray(hot.args), np.asarray(cold.args)]))
+
+
+def arena_matrix(quick: bool = False, seed: int = 0,
+                 num_records: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 n_batches: Optional[int] = None) -> List[ArenaCell]:
+    """The full matrix (``--quick`` shrinks sizes, keeps every cell kind
+    so CI exercises all paths). All YCSB-shaped cells share (Rd=W=10,
+    D); SmallBank cells share (Rd=W=3, D)."""
+    R = num_records or (1 << 16 if quick else 1 << 18)
+    T = batch_size or (256 if quick else 1024)
+    B = n_batches or (3 if quick else 8)
+    rng = np.random.default_rng(seed)
+    cells: List[ArenaCell] = []
+
+    thetas = (0.0, 0.9, 0.99) if quick else (0.0, 0.6, 0.9, 0.99)
+    for theta in thetas:
+        cells.append(ArenaCell(
+            f"ycsb-10rmw-z{theta:g}", "ycsb", R,
+            [gen_ycsb_batch(rng, T, R, theta=theta, mix="10rmw")
+             for _ in range(B)], theta=theta, mix="10rmw"))
+    cells.append(ArenaCell(
+        "ycsb-2rmw8r-z0.9", "ycsb", R,
+        [gen_ycsb_batch(rng, T, R, theta=0.9, mix="2rmw8r")
+         for _ in range(B)], theta=0.9, mix="2rmw8r"))
+
+    # disjoint stream: batch b's records live in stripe b — zero
+    # cross-batch and zero intra-batch-free contention (the embarrassing
+    # case every protocol should ace)
+    stripe = R // B
+    cells.append(ArenaCell(
+        "stream-disjoint", "stream", R,
+        [_shift(gen_ycsb_batch(rng, T, min(stripe, R - b * stripe),
+                               theta=0.0, mix="10rmw"), b * stripe)
+         for b in range(B)], mix="10rmw"))
+    # mixed stream: a fixed hot set hammered by a fraction of every batch
+    cells.append(ArenaCell(
+        "stream-mixed", "stream", R,
+        [_mixed_batch(rng, T, R) for _ in range(B)], mix="10rmw"))
+
+    # pinned snapshot scans interleaved with a contended update stream
+    cells.append(ArenaCell(
+        "scan-pinned-z0.9", "scan", R,
+        [gen_ycsb_batch(rng, T, R, theta=0.9, mix="10rmw")
+         for _ in range(B)], theta=0.9, mix="10rmw",
+        scans=[gen_scan_batch(rng, T, R, ops=YCSB_OPS, theta=0.9)
+               for _ in range(B)]))
+
+    # SmallBank: 100 customers = the paper's high-contention point
+    n_cust = 100
+    sb_T = T
+    cells.append(ArenaCell(
+        "smallbank-high", "smallbank", 2 * n_cust,
+        [gen_smallbank_batch(rng, sb_T, n_cust) for _ in range(B)],
+        mix="full"))
+    cells.append(ArenaCell(
+        "smallbank-readonly", "smallbank", 2 * n_cust,
+        [gen_smallbank_batch(rng, sb_T, n_cust, mix=(1.0, 0, 0, 0, 0))
+         for _ in range(B)], mix="balance"))
+    return cells
+
+
+# ---------------------------------------------------------------------------
+# Runner
+# ---------------------------------------------------------------------------
+def _workload_for(cell: ArenaCell, payload_words: int):
+    if cell.kind == "smallbank":
+        return make_smallbank(payload_words)
+    return make_ycsb(payload_words, ops=YCSB_OPS)
+
+
+def _certify_stream(proto: ProtocolEngine, cell: ArenaCell
+                    ) -> Dict[str, object]:
+    """Tag-replay the cell's update stream through ``proto``'s twin and
+    certify every batch's MVSG (final-state check on the last batch)."""
+    twin = proto.tag_twin()
+    twin.reset()
+    offsets = np.cumsum([0] + [b.size for b in cell.batches[:-1]])
+    outs = twin.run_batches([tag_batch(b, int(off))
+                             for b, off in zip(cell.batches, offsets)])
+    final = np.asarray(twin.finish())[:, 0]
+    committed = 0
+    verdict = None
+    for i, (batch, off, out) in enumerate(
+            zip(cell.batches, offsets, outs)):
+        mask = np.asarray(out.commit_mask)
+        committed += int(mask.sum())
+        v = certify(batch, np.asarray(out.read_vals)[:, :, 0], mask,
+                    final if i == len(outs) - 1 else None,
+                    tag_offset=int(off))
+        if verdict is None or (verdict.serializable
+                               and not v.serializable):
+            verdict = v
+    return {"committed": committed, "verdict": verdict.label,
+            "exact": verdict.exact}
+
+
+def run_cell(cell: ArenaCell, protos: Dict[str, ProtocolEngine],
+             iters: int = 2, base=None) -> List[Dict[str, object]]:
+    """One matrix cell across protocols -> one row per protocol.
+    ``base`` (optional [R, D]) seeds every protocol's store each stream
+    (SmallBank's non-zero opening balances); certification always runs
+    on a zero store — tag semantics ignore payloads."""
+    rows = []
+    for name, proto in protos.items():
+        def stream() -> None:
+            proto.reset(base)
+            for i, batch in enumerate(cell.batches):
+                proto.submit(batch)
+                if cell.scans:
+                    proto.run_scan(cell.scans[i])
+            proto.finish()
+
+        stream()                                   # untimed compile pass
+        best = np.inf
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            stream()
+            best = min(best, time.perf_counter() - t0)
+        # reset() zeroes the protocol's own counters, so these are the
+        # final timed stream's values — one stream's worth of proxies
+        proxies = proto.proxy_stats()
+
+        cert = _certify_stream(proto, cell)
+        total = cell.total_txns + sum(s.size for s in cell.scans)
+        committed = cert["committed"] + sum(s.size for s in cell.scans)
+        aborted = cell.total_txns - cert["committed"]
+        rows.append({
+            "cell": cell.name, "kind": cell.kind, "theta": cell.theta,
+            "mix": cell.mix, "protocol": name,
+            "num_records": cell.num_records,
+            "batch_size": cell.batches[0].size,
+            "n_batches": len(cell.batches),
+            "txns": total, "committed": committed,
+            "time_s": round(best, 6),
+            "txn_s": round(committed / best, 1),
+            "abort_rate": round(aborted / max(cell.total_txns, 1), 4),
+            "verdict": cert["verdict"], "exact": cert["exact"],
+            "proxy": " ".join(f"{k}={v}" for k, v in proxies.items()),
+        })
+    return rows
+
+
+def run_matrix(cells: Optional[Iterable[ArenaCell]] = None,
+               quick: bool = False, iters: int = 2,
+               protocols: Sequence[str] = PROTOCOL_NAMES,
+               registry: Optional[MetricsRegistry] = None,
+               payload_words: int = 2,
+               progress: Optional[Callable[[str], None]] = None
+               ) -> List[Dict[str, object]]:
+    """All cells x all protocols. Protocol sets are built once per
+    tensor-shape group and reset between cells."""
+    cells = list(cells if cells is not None else arena_matrix(quick))
+    registry = registry if registry is not None else MetricsRegistry()
+    groups: Dict[tuple, Dict[str, ProtocolEngine]] = {}
+    rows: List[Dict[str, object]] = []
+    for cell in cells:
+        wl = _workload_for(cell, payload_words)
+        key = (cell.kind == "smallbank", cell.num_records,
+               wl.payload_words)
+        if key not in groups:
+            groups[key] = make_protocols(cell.num_records, wl, registry,
+                                         names=protocols)
+        if progress:
+            progress(f"cell {cell.name}: {len(groups[key])} protocols")
+        rows.extend(run_cell(cell, groups[key], iters=iters))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# The gauntlet, cross-protocol
+# ---------------------------------------------------------------------------
+def run_gauntlet(scenarios: Optional[Sequence[Scenario]] = None,
+                 protocols: Sequence[str] = PROTOCOL_NAMES,
+                 registry: Optional[MetricsRegistry] = None
+                 ) -> List[Dict[str, object]]:
+    """Every anomaly scenario through every protocol adapter (on tag
+    semantics — scenario meaning is purely structural) plus the
+    ``si-schedule`` interpreter under the scenario's adversarial
+    begin/commit interleaving. One row per (scenario, protocol)."""
+    scenarios = list(scenarios if scenarios is not None
+                     else default_scenarios())
+    registry = registry if registry is not None else MetricsRegistry()
+    rows = []
+    groups: Dict[tuple, Dict[str, ProtocolEngine]] = {}
+    for sc in scenarios:
+        Rd, W = sc.batch.n_read, sc.batch.n_write
+        key = (sc.n_records, Rd, W)
+        if key not in groups:
+            wl = anomalies.make_tag_workload(Rd, W)
+            groups[key] = make_protocols(sc.n_records, wl, registry,
+                                         names=protocols)
+        tagged = tag_batch(sc.batch, 0)
+        for name, proto in groups[key].items():
+            proto.reset()
+            out = proto.run_batch(tagged)
+            final = np.asarray(proto.finish())[:, 0]
+            v = certify(sc.batch, np.asarray(out.read_vals)[:, :, 0],
+                        np.asarray(out.commit_mask), final)
+            rows.append(_gauntlet_row(sc, name, v))
+        final, read_tags, mask = run_si_schedule(
+            sc.batch, sc.n_records, sc.si_begin, sc.si_commit)
+        v = certify(sc.batch, read_tags, mask, final)
+        rows.append(_gauntlet_row(sc, "si-schedule", v))
+    return rows
+
+
+def _gauntlet_row(sc: Scenario, protocol: str,
+                  v: "anomalies.Verdict") -> Dict[str, object]:
+    # ground truth: only SI may exhibit an anomaly, and the adversarial
+    # si-schedule interpreter must exhibit it whenever the scenario
+    # carries one (batch-concurrent ``si`` needs no interleaving for
+    # write-skew but cannot express the read-only anomaly)
+    if protocol == "si-schedule":
+        expected = not sc.expect_si_anomaly
+    elif protocol == "si":
+        expected = not (sc.expect_si_anomaly
+                        and sc.name.startswith("write-skew"))
+    else:
+        expected = True
+    return {"cell": f"gauntlet:{sc.name}", "kind": "gauntlet",
+            "theta": 0.0, "mix": "-", "protocol": protocol,
+            "num_records": sc.n_records, "batch_size": sc.batch.size,
+            "n_batches": 1, "txns": sc.batch.size,
+            "committed": v.n_committed, "time_s": 0.0, "txn_s": 0.0,
+            "abort_rate": round(1 - v.n_committed
+                                / max(sc.batch.size, 1), 4),
+            "verdict": v.label, "exact": v.exact,
+            "proxy": f"edges={v.n_edges}"
+                     + (f" cycle={list(v.cycle)}" if v.cycle else ""),
+            "expected_serializable": expected,
+            "as_expected": v.serializable == expected}

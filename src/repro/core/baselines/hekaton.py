@@ -90,6 +90,11 @@ def run_hekaton(base: jax.Array, batch: TxnBatch, workload: Workload,
     base_f, _, reads, rounds, bumps = jax.lax.while_loop(
         cond, body, (base, jnp.ones((T,), bool), reads0,
                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+    # uniform stats contract (repro.arena): pessimistic MVCC never aborts
+    # on conflict — writers WAIT for readers instead (the rounds count)
     return base_f, reads, {"rounds": rounds,
                            "read_counter_bumps": bumps,
-                           "max_read_crowd": max_read_crowd}
+                           "max_read_crowd": max_read_crowd,
+                           "aborts": jnp.zeros((), jnp.int32),
+                           "commits": jnp.asarray(T, jnp.int32),
+                           "commit_mask": jnp.ones((T,), bool)}

@@ -60,7 +60,7 @@ def run_occ(base: jax.Array, batch: TxnBatch, workload: Workload,
         base_new = base_ext.at[flat_c].set(write_vals.reshape(-1, D),
                                            mode="drop")[:-1]
         reads = jnp.where(commit[:, None, None], vals, reads)
-        n_abort = jnp.sum(pending & ~commit)
+        n_abort = jnp.sum(pending & ~commit).astype(jnp.int32)
         return (base_new, pending & ~commit, reads, rounds + 1,
                 aborts + n_abort)
 
@@ -68,4 +68,9 @@ def run_occ(base: jax.Array, batch: TxnBatch, workload: Workload,
     base_f, _, reads, rounds, aborts = jax.lax.while_loop(
         cond, body, (base, jnp.ones((T,), bool), reads0,
                      jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
-    return base_f, reads, {"rounds": rounds, "aborts": aborts}
+    # uniform stats contract (repro.arena): aborted txns retry until they
+    # validate, so every txn eventually commits — ``aborts`` counts the
+    # validation failures (wasted executions), the OCC cost proxy
+    return base_f, reads, {"rounds": rounds, "aborts": aborts,
+                           "commits": jnp.asarray(T, jnp.int32),
+                           "commit_mask": jnp.ones((T,), bool)}

@@ -1,8 +1,13 @@
 """Snapshot Isolation baseline (Berenson et al. [6]).
 
 Batch-concurrent model: every transaction reads the batch-start snapshot;
-write-write conflicts resolve first-committer-wins (the earliest-ts writer
-of each record commits, later writers of the same record abort). Reads are
+write-write conflicts resolve first-committer-wins with commit attempts in
+ts order (the earliest-ts writer that actually COMMITS claims the record;
+writers that lose every conflict to already-committed txns abort, and a
+record whose earlier writer aborted falls to its next-ts writer —
+``repro.arena.anomalies.run_si_schedule`` is the epoch-interleaved host
+twin, property-tested equal at the degenerate all-concurrent schedule).
+Reads are
 never blocked and never block — but anti-dependencies are not tracked, so
 the result can be NON-serializable (write-skew): transactions with
 overlapping read-sets and disjoint write-sets all commit against the same
@@ -31,12 +36,31 @@ def run_si(base: jax.Array, batch: TxnBatch, workload: Workload,
     w_rec = jnp.maximum(batch.write_set, 0)
     w_valid = batch.write_set >= 0
 
-    # first-committer-wins per record
-    flat_rec = jnp.where(w_valid, w_rec, R).reshape(-1)
-    t_b = jnp.where(w_valid, ts[:, None], INF).reshape(-1)
-    min_writer = jnp.full((R + 1,), INF, jnp.int32).at[flat_rec].min(t_b)
-    commit = jnp.all(jnp.where(w_valid, min_writer[w_rec] >= ts[:, None],
-                               True), axis=1)
+    # first-COMMITTER-wins per record, commit attempts in ts order: txn t
+    # commits iff no committed smaller-ts txn wrote any of its write
+    # records. An aborted earlier writer installs nothing, so the next-ts
+    # writer of the record commits — a Kleene fixpoint over the committed
+    # set (dependencies are strictly ts-decreasing, so it converges; the
+    # iteration count lands in ``rounds``). Committed writers stay
+    # pairwise record-disjoint, so the commit scatter below has no
+    # duplicate indices.
+    def cond(state):
+        commit, prev, rounds = state
+        return jnp.any(commit != prev)
+
+    def body(state):
+        commit, _, rounds = state
+        flat = jnp.where(w_valid & commit[:, None], w_rec, R).reshape(-1)
+        t_b = jnp.where(w_valid & commit[:, None], ts[:, None],
+                        INF).reshape(-1)
+        min_c = jnp.full((R + 1,), INF, jnp.int32).at[flat].min(t_b)
+        new = jnp.all(jnp.where(w_valid, min_c[w_rec] >= ts[:, None],
+                                True), axis=1)
+        return new, commit, rounds + 1
+
+    commit, _, rounds = jax.lax.while_loop(
+        cond, body, (jnp.ones((T,), bool), jnp.zeros((T,), bool),
+                     jnp.zeros((), jnp.int32)))
 
     vals = base[r_rec]                                        # snapshot reads
     write_vals, _ = workload.apply(batch.txn_type, vals, batch.args)
@@ -44,5 +68,10 @@ def run_si(base: jax.Array, batch: TxnBatch, workload: Workload,
     base_ext = jnp.concatenate([base, jnp.zeros((1, D), base.dtype)])
     final = base_ext.at[flat_rec_c].set(write_vals.reshape(-1, D),
                                         mode="drop")[:-1]
-    return final, vals, {"aborts": jnp.sum(~commit),
-                         "commits": jnp.sum(commit)}
+    # uniform stats contract (repro.arena): SI aborts are PERMANENT
+    # (first-committer-wins losers do not retry against a fresh snapshot
+    # in this batch model) — ``commit_mask`` identifies the survivors
+    return final, vals, {"rounds": rounds,
+                         "aborts": jnp.sum(~commit).astype(jnp.int32),
+                         "commits": jnp.sum(commit).astype(jnp.int32),
+                         "commit_mask": commit}

@@ -52,11 +52,11 @@ def run_2pl(base: jax.Array, batch: TxnBatch, workload: Workload,
         return out.at[flat_rec].min(t_b.reshape(-1))
 
     def cond(state):
-        base, pending, reads, rounds = state
+        base, pending, reads, rounds, waits = state
         return jnp.any(pending)
 
     def body(state):
-        base, pending, reads, rounds = state
+        base, pending, reads, rounds, waits = state
         min_w = min_requester(pending, w_rec, w_valid)   # exclusive req
         min_r = min_requester(pending, r_rec, r_valid)   # shared req
         # txn t gets its exclusive locks iff it is the min (w or r) requester
@@ -76,10 +76,20 @@ def run_2pl(base: jax.Array, batch: TxnBatch, workload: Workload,
         base_new = base_ext.at[flat_rec].set(
             write_vals.reshape(-1, D), mode="drop")[:-1]
         reads = jnp.where(grant[:, None, None], vals, reads)
-        return (base_new, pending & ~grant, reads, rounds + 1)
+        # lock waits: every pending txn denied its locks this round sat in
+        # the lock-wait queue — the protocol-native contention proxy (the
+        # analogue of Hekaton's read-counter bumps / OCC's aborts)
+        n_wait = jnp.sum(pending & ~grant).astype(jnp.int32)
+        return (base_new, pending & ~grant, reads, rounds + 1,
+                waits + n_wait)
 
     reads0 = jnp.zeros((T, Rd, D), jnp.int32)
-    base_f, _, reads, rounds = jax.lax.while_loop(
+    base_f, _, reads, rounds, waits = jax.lax.while_loop(
         cond, body, (base, jnp.ones((T,), bool), reads0,
-                     jnp.zeros((), jnp.int32)))
-    return base_f, reads, {"rounds": rounds}
+                     jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32)))
+    # uniform stats contract (repro.arena): 0-d int32 scalars + a [T]
+    # commit mask — 2PL never aborts (wound-wait on ts order terminates)
+    return base_f, reads, {"rounds": rounds, "lock_waits": waits,
+                           "aborts": jnp.zeros((), jnp.int32),
+                           "commits": jnp.asarray(T, jnp.int32),
+                           "commit_mask": jnp.ones((T,), bool)}

@@ -74,6 +74,19 @@ class MetricsRegistry:
             else:
                 self._device[name] = cur + delta
 
+    def accumulate_max(self, name: str, value: jax.Array) -> None:
+        """Device-side ``total = max(total, value)`` — the high-watermark
+        twin of ``accumulate`` for proxies that are maxima rather than
+        sums (e.g. the Hekaton ``max_read_crowd`` read-counter crowd).
+        Same cost model: a lazy device op, no host sync."""
+        with self._lock:
+            cur = self._device.get(name)
+            if cur is None:
+                self._device_init[name] = jnp.zeros_like(value)
+                self._device[name] = value
+            else:
+                self._device[name] = jnp.maximum(cur, value)
+
     def peek(self, name: str) -> jax.Array:
         """The raw device accumulator (no transfer) — for callers doing
         further device-side arithmetic on a counter."""

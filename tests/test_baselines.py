@@ -1,0 +1,167 @@
+"""Baseline runner determinism + abort accounting + the uniform stats
+contract (``repro.arena`` satellite coverage).
+
+Seeded-stream golden tests pin the exact round/abort/wait counts of each
+baseline on a fixed zipfian batch — any change to the round models shows
+up as a diff here, not as silent benchmark drift. The MVSG graph checker
+(``repro.arena.anomalies.certify``) serves as the semantic oracle:
+whatever the counts, the committed output must stay serial-equivalent.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arena import certify, make_tag_workload, tag_batch
+from repro.core.baselines import run_2pl, run_hekaton, run_occ, run_si
+from repro.core.workloads import gen_ycsb_batch, make_ycsb
+from repro.obs import MetricsRegistry
+
+RUNNERS = {"2pl": run_2pl, "occ": run_occ, "si": run_si,
+           "hekaton": run_hekaton}
+R, T = 512, 64
+
+
+def _golden_batch():
+    rng = np.random.default_rng(42)
+    return gen_ycsb_batch(rng, T, R, theta=0.9, mix="10rmw")
+
+
+def _run(name, batch, payload_words=2):
+    wl = make_ycsb(payload_words=payload_words)
+    f = jax.jit(functools.partial(RUNNERS[name], workload=wl,
+                                  num_records=R))
+    return f(jnp.zeros((R, payload_words), jnp.int32), batch)
+
+
+# ---------------------------------------------------------------------------
+# Seeded golden values (theta=0.9, seed=42, R=512, T=64)
+# ---------------------------------------------------------------------------
+GOLDEN = {
+    "2pl": {"rounds": 56, "lock_waits": 1798, "aborts": 0,
+            "commits": 64},
+    "occ": {"rounds": 56, "aborts": 1798, "commits": 64},
+    "si": {"rounds": 4, "aborts": 60, "commits": 4},
+    "hekaton": {"rounds": 56, "read_counter_bumps": 19260,
+                "max_read_crowd": 44, "aborts": 0, "commits": 64},
+}
+GOLDEN_SUMS = {"2pl": (640, 2653), "occ": (640, 2653),
+               "si": (40, 0), "hekaton": (640, 2653)}
+
+
+@pytest.mark.parametrize("name", sorted(RUNNERS))
+def test_seeded_golden(name):
+    base, reads, m = _run(name, _golden_batch())
+    for key, want in GOLDEN[name].items():
+        assert int(m[key]) == want, (key, int(m[key]))
+    want_base, want_reads = GOLDEN_SUMS[name]
+    assert int(base.sum()) == want_base
+    assert int(reads.sum()) == want_reads
+
+
+@pytest.mark.parametrize("name", sorted(RUNNERS))
+def test_rerun_byte_identical(name):
+    """Same seeded batch twice through a fresh jit: outputs must be
+    byte-identical (the runners are pure functions of (base, batch))."""
+    batch = _golden_batch()
+    b1, r1, m1 = _run(name, batch)
+    b2, r2, m2 = _run(name, batch)
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    for k in m1:
+        np.testing.assert_array_equal(np.asarray(m1[k]),
+                                      np.asarray(m2[k]))
+
+
+# ---------------------------------------------------------------------------
+# Uniform stats contract (MetricsRegistry views across all protocols)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(RUNNERS))
+def test_stats_contract(name):
+    _, _, m = _run(name, _golden_batch())
+    for key in ("rounds", "aborts", "commits"):
+        assert m[key].shape == () and m[key].dtype == jnp.int32, key
+    assert m["commit_mask"].shape == (T,)
+    assert m["commit_mask"].dtype == jnp.bool_
+    assert int(m["commit_mask"].sum()) == int(m["commits"])
+    # every scalar accumulates into a registry without dtype surgery
+    reg = MetricsRegistry()
+    for k, v in m.items():
+        if v.ndim == 0:
+            reg.accumulate(f"arena/{name}/{k}", v)
+            reg.accumulate(f"arena/{name}/{k}", v)
+    snap = reg.snapshot(include_gauges=False)
+    assert snap[f"arena/{name}/rounds"] == 2 * int(m["rounds"])
+
+
+def test_abort_accounting():
+    """SI aborts are permanent (commits + aborts = T, one committed
+    writer per record); OCC aborts are retries (everyone commits, aborts
+    counts wasted validations); 2PL/Hekaton never abort."""
+    batch = _golden_batch()
+    _, _, ms = _run("si", batch)
+    assert int(ms["commits"]) + int(ms["aborts"]) == T
+    ws = np.asarray(batch.write_set)
+    mask = np.asarray(ms["commit_mask"])
+    written = ws[mask].ravel()
+    written = written[written >= 0]
+    assert len(written) == len(set(written.tolist()))   # FCW: disjoint
+    _, _, mo = _run("occ", batch)
+    assert bool(np.asarray(mo["commit_mask"]).all())
+    assert int(mo["aborts"]) >= 0
+    for name in ("2pl", "hekaton"):
+        _, _, m = _run(name, batch)
+        assert int(m["aborts"]) == 0
+        assert bool(np.asarray(m["commit_mask"]).all())
+
+
+# ---------------------------------------------------------------------------
+# Graph checker as the semantic oracle over random streams
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["2pl", "occ", "hekaton"])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_serial_equivalence_oracle(name, seed):
+    """Whatever the models' round counts do, committed output on a
+    contended RMW stream must certify as serial-equivalent."""
+    rng = np.random.default_rng(seed)
+    batch = gen_ycsb_batch(rng, 48, 256, theta=0.95, mix="10rmw")
+    wl = make_tag_workload(batch.n_read, batch.n_write)
+    f = jax.jit(functools.partial(RUNNERS[name], workload=wl,
+                                  num_records=256))
+    final, reads, m = f(jnp.zeros((256, 1), jnp.int32),
+                        tag_batch(batch, 0))
+    v = certify(batch, np.asarray(reads)[:, :, 0],
+                np.asarray(m["commit_mask"]), np.asarray(final)[:, 0])
+    assert v.serializable and v.exact, (name, seed, v)
+
+
+def test_si_oracle_on_rmw_stream():
+    """Pure RMW: SI's committed subset (write = read set) is
+    record-disjoint, hence serializable — the checker must agree."""
+    rng = np.random.default_rng(11)
+    batch = gen_ycsb_batch(rng, 48, 256, theta=0.95, mix="10rmw")
+    wl = make_tag_workload(10, 10)
+    f = jax.jit(functools.partial(run_si, workload=wl, num_records=256))
+    final, reads, m = f(jnp.zeros((256, 1), jnp.int32),
+                        tag_batch(batch, 0))
+    v = certify(batch, np.asarray(reads)[:, :, 0],
+                np.asarray(m["commit_mask"]), np.asarray(final)[:, 0])
+    assert v.serializable
+
+
+def test_si_write_skew_not_serializable():
+    """2RMW-8R creates read-write overlap with disjoint writes — SI
+    commits write-skewed pairs and the checker flags the output (the
+    anomaly the arena matrix surfaces on ycsb-2rmw8r cells)."""
+    rng = np.random.default_rng(2)
+    batch = gen_ycsb_batch(rng, 64, 64, theta=0.9, mix="2rmw8r")
+    wl = make_tag_workload(10, 10)
+    f = jax.jit(functools.partial(run_si, workload=wl, num_records=64))
+    final, reads, m = f(jnp.zeros((64, 1), jnp.int32), tag_batch(batch, 0))
+    v = certify(batch, np.asarray(reads)[:, :, 0],
+                np.asarray(m["commit_mask"]), np.asarray(final)[:, 0])
+    assert not v.serializable
