@@ -1,32 +1,47 @@
-"""Conflict-aware admission benchmark — merged epochs + exec-exec overlap.
+"""Out-of-order admission benchmark — reordering vs FIFO-prefix merging.
 
 A skewed update stream interleaves two batch species:
 
-  cold    YCSB 10RMW over one of ``N_STRIPES`` disjoint key stripes
-          (round-robin) — adjacent cold batches have disjoint record
-          footprints, so the conflict-aware scheduler merges them into
-          one CC epoch and/or overlaps their exec phases;
-  hot     every transaction touches a small shared hot set — a hot batch
-          conflicts with everything, ending merge chains and forcing the
-          paper's batch barrier (the fallback path).
+  cold    YCSB RMW over one of several disjoint key stripes
+          (round-robin; 10 ops in disjoint_cold, ``MIX_OPS`` short
+          update txns in mixed) — cold batches of different stripes
+          commute, so the scheduler merges them into one CC epoch
+          and/or chains their exec phases;
+  hot     a hot-key storm: ``MIX_HOT_BURST`` back-to-back batches all
+          RMW the SAME contended stripe (the stripe rotates per burst).
+          Burst members conflict with each other but commute with the
+          cold stripes and with other bursts — the head-of-line case:
+          the FIFO-prefix scheduler (PR 3) stops its merge scan at the
+          second burst member, so most of the burst dispatches as
+          singleton epochs, while the out-of-order scheduler hops the
+          rest of the burst and pairs each member with later disjoint
+          cold work.
 
-Streams: ``disjoint_cold`` (cold only — the best case the ISSUE's
-acceptance criterion names) and ``mixed`` (a hot batch every
-``HOT_EVERY``-th admission). Each stream runs through ``TxnService`` at
-several ``admission_window`` sizes against the barriered FIFO baseline
-(``pipelined=False, admission_window=1`` — host joins every batch, no
-merging). Reported per cell:
+Streams:
+
+  disjoint_cold   cold only — the merge/chain best case;
+  mixed           a same-stripe burst every ``MIX_HOT_PERIOD``
+                  admissions (the acceptance stream: OOO >= 1.3x
+                  fifo_w4 and >= 1.5x barriered);
+  latency_class   interactive point batches interleaved with bulk
+                  scans — reports per-class p50/p99 ticket latency
+                  (the ``latency_class="interactive"`` queue-jump win).
+
+Cells per stream: ``barriered`` (pipelined=False, window=1 — host joins
+every batch), ``fifo_w2``/``fifo_w4`` (PR 3's FIFO-prefix merge,
+``reorder=False``), and ``ooo`` (reorder + deep exec chaining,
+window=16, max_inflight_execs=4). Reported per cell:
 
   txn_s              committed transactions / second over the timed stream
-  merged_batches     batches folded into a preceding CC epoch
-  overlapped_execs   exec(b+1) dispatches ahead of commit(b)
-  window_occupancy   max admission-window occupancy one scan observed
   vs_barriered       throughput ratio over the barriered baseline
-                     (same stream) — expect >= 1.0 on disjoint_cold,
-                     growing with the window
+  vs_fifo4           throughput ratio over the fifo_w4 cell
+  merged_batches     batches folded into a preceding CC epoch
+  hopped_batches     hop events (a queued batch jumped by a later one)
+  overlapped_execs   execs dispatched ahead of a pending commit
+  chain_depth_max    deepest exec chain against one store snapshot
 
 The scheduled result is property-tested byte-identical to sequential
-``run_batch`` calls (tests/test_service.py); this benchmark only
+``run_batch`` calls (tests/test_scheduler_props.py); this benchmark only
 quantifies the throughput side. Single-device logical substrate (no
 subprocess needed — the scheduler decisions are host-side).
 """
@@ -36,6 +51,7 @@ import json
 import sys
 import time
 
+import jax
 import numpy as np
 
 from benchmarks.common import RESULTS_DIR, write_csv
@@ -46,69 +62,110 @@ from repro.obs import PhaseTracer, validate_chrome_trace
 from repro.service import TxnService
 
 N_RECORDS = 8192
-BATCH = 256
-N_BATCHES = 16
+BATCH = 64
+N_BATCHES = 24
 RING_SLOTS = 8
+# disjoint_cold: 4 stripes over the whole key space (PR 3's stream)
 N_STRIPES = 4
-HOT_KEYS = 16
-HOT_EVERY = 4
-WINDOWS = (1, 2, 4)
+# mixed: 8 stripes carved from [HOT_RANGE, N_RECORDS); stripes
+# 0..MIX_BURST_STRIPES-1 are the contended ones (one per burst,
+# rotating), the rest carry the round-robin cold traffic. HOT_RANGE is
+# reserved for the latency stream's interactive point batches.
+HOT_RANGE = N_RECORDS // 16
+MIX_STRIPES = 8
+MIX_BURST_STRIPES = 3
+MIX_HOT_BURST = 3
+MIX_HOT_PERIOD = 8
+# mixed models short update txns (4 RMW): the dispatch-overhead-bound
+# regime where admission order dominates, i.e. where head-of-line
+# blocking actually costs throughput
+MIX_OPS = 4
+# latency_class: interactive point batches on the reserved range
+INTER_T, INTER_OPS = 16, 2
+INTER_EVERY = 6
+
+# window 16 sees across one full burst period, so an epoch can pick up
+# commuting members of DIFFERENT bursts (one per contended stripe)
+OOO_KW = dict(max_inflight=4, admission_window=16, max_inflight_execs=4)
 
 
-def _cold_batch(rng, stripe: int, ops: int = 10):
-    """10RMW over one key stripe: footprint-disjoint across stripes."""
-    lo = stripe * (N_RECORDS // N_STRIPES)
-    hi = lo + N_RECORDS // N_STRIPES
-    recs = rng.integers(lo, hi, size=(BATCH, ops))
-    # distinct records per txn (paper: '10 unique records'), cheap probe
+def _span_batch(rng, lo: int, hi: int, ops: int = 10, t: int = BATCH):
+    """RMW batch over [lo, hi): distinct records per txn (paper: '10
+    unique records'), cheap probe."""
+    recs = rng.integers(lo, hi, size=(t, ops))
     for col in range(1, ops):
         dup = (recs[:, col:col + 1] == recs[:, :col]).any(axis=1)
         recs[dup, col] = lo + (recs[dup, col] - lo + col) % (hi - lo)
-    return make_batch(recs, recs.copy(), np.zeros(BATCH, np.int32),
-                      np.zeros((BATCH, 1), np.int32))
+    return make_batch(recs, recs.copy(), np.zeros(t, np.int32),
+                      np.zeros((t, 1), np.int32))
 
 
-def _hot_batch(rng, ops: int = 10):
-    """Every txn RMWs inside a tiny hot set spread across ALL stripes —
-    a hot batch conflicts with every cold batch species."""
-    hot_ids = np.arange(HOT_KEYS) * (N_RECORDS // HOT_KEYS)
-    recs = hot_ids[np.stack([rng.choice(HOT_KEYS, size=ops, replace=False)
-                             for _ in range(BATCH)])]
-    return make_batch(recs, recs.copy(), np.zeros(BATCH, np.int32),
-                      np.zeros((BATCH, 1), np.int32))
+def _cold_batch(rng, stripe: int):
+    lo = stripe * (N_RECORDS // N_STRIPES)
+    return _span_batch(rng, lo, lo + N_RECORDS // N_STRIPES)
+
+
+def _mix_cold_batch(rng, stripe: int):
+    width = (N_RECORDS - HOT_RANGE) // MIX_STRIPES
+    lo = HOT_RANGE + stripe * width
+    return _span_batch(rng, lo, lo + width, ops=MIX_OPS)
 
 
 def _stream(rng, kind: str):
-    out = []
+    out, cold = [], 0
+    n_cold_stripes = MIX_STRIPES - MIX_BURST_STRIPES
     for i in range(N_BATCHES):
-        if kind == "mixed" and i % HOT_EVERY == HOT_EVERY - 1:
-            out.append(_hot_batch(rng))
+        if kind == "mixed":
+            if i % MIX_HOT_PERIOD < MIX_HOT_BURST:
+                # the whole burst hits ONE contended stripe
+                out.append(_mix_cold_batch(
+                    rng, (i // MIX_HOT_PERIOD) % MIX_BURST_STRIPES))
+            else:
+                out.append(_mix_cold_batch(
+                    rng, MIX_BURST_STRIPES + cold % n_cold_stripes))
+                cold += 1
         else:
             out.append(_cold_batch(rng, i % N_STRIPES))
     return out
 
 
+def _cells():
+    """(name, TxnService kwargs) — barriered and FIFO baselines plus the
+    out-of-order scheduler at its working point."""
+    return [
+        ("barriered", dict(max_inflight=2, pipelined=False,
+                           admission_window=1)),
+        ("fifo_w2", dict(max_inflight=2, admission_window=2,
+                         reorder=False)),
+        ("fifo_w4", dict(max_inflight=2, admission_window=4,
+                         reorder=False)),
+        ("ooo", dict(**OOO_KW)),
+    ]
+
+
+_DECISION_KEYS = ("merged_batches", "overlapped_execs", "hopped_batches",
+                  "class_promotions", "chain_depth_max")
+
+
 def bench_stream(kind: str, rng, n_passes: int) -> list:
     wl = make_ycsb(payload_words=2)
     batches = _stream(rng, kind)
-    cells = [("barriered", False, 1)] + [
-        (f"window{w}", True, w) for w in WINDOWS]
+    cells = _cells()
     svcs, times = {}, {}
-    for name, pipelined, window in cells:
+    for name, kw in cells:
         eng = BohmEngine(N_RECORDS, wl, ring_slots=RING_SLOTS)
-        svc = TxnService(eng, max_inflight=2, pipelined=pipelined,
-                         admission_window=window)
+        svc = TxnService(eng, **kw)
         svc.submit_many(batches)       # untimed warmup pass: compiles
         svc.drain()                    # every epoch shape the stream hits
         svcs[name] = svc
         times[name] = []
     for i in range(n_passes):          # store keeps rolling between passes
         order = cells if i % 2 == 0 else cells[::-1]
-        for name, _, _ in order:       # alternate order: no drift bias
+        for name, _ in order:          # alternate order: no drift bias
             svc = svcs[name]
             # per-pass counters: the reported row holds ONE stream's
             # scheduler decisions, not n_passes times them
-            svc.stats.update(merged_batches=0, overlapped_execs=0)
+            svc.stats.update({k: 0 for k in _DECISION_KEYS})
             t0 = time.perf_counter()
             svc.submit_many(batches)
             svc.drain()
@@ -116,22 +173,124 @@ def bench_stream(kind: str, rng, n_passes: int) -> list:
 
     n_txn = N_BATCHES * BATCH
     base_dt = min(times["barriered"])
+    fifo_dt = min(times["fifo_w4"])
     rows = []
-    for name, pipelined, window in cells:
+    for name, kw in cells:
         dt = min(times[name])
         svc = svcs[name]
         rows.append({
             "stream": kind,
             "mode": name,
-            "admission_window": window,
+            "admission_window": kw.get("admission_window", 1),
             "batch": BATCH,
             "txn_s": round(n_txn / dt),
             "us_per_txn": round(1e6 * dt / n_txn, 2),
             "merged_batches": svc.stats["merged_batches"],
+            "hopped_batches": svc.stats["hopped_batches"],
             "overlapped_execs": svc.stats["overlapped_execs"],
+            "chain_depth_max": svc.stats["chain_depth_max"],
             "window_occupancy": svc.stats["admission_window_occupancy"],
             "vs_barriered": round(base_dt / dt, 3),
+            "vs_fifo4": round(fifo_dt / dt, 3),
         })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# latency-class stream: per-class p50/p99 ticket latency
+# ---------------------------------------------------------------------------
+def _latency_stream(rng):
+    """(batch, latency_class) pairs: bulk full-range scans (mutually
+    conflicting) with an interactive point batch every INTER_EVERY
+    admissions on the reserved range (commutes with every bulk)."""
+    out = []
+    for i in range(N_BATCHES):
+        if i % INTER_EVERY == INTER_EVERY - 1:
+            out.append((_span_batch(rng, 0, HOT_RANGE, ops=INTER_OPS,
+                                    t=INTER_T), "interactive"))
+        else:
+            out.append((_span_batch(rng, HOT_RANGE, N_RECORDS),
+                        "bulk"))
+    return out
+
+
+def _run_latency_pass(svc, stream):
+    """Burst-submit the stream, recording each ticket's completion time
+    SINCE BURST START (every request arrives at t0, so queue position is
+    the latency — the regime where an interactive batch jumping queued
+    bulk work shows up directly). Pending INTERACTIVE tickets are swept
+    after every submit: an interactive submit is already a flush point
+    (it disables the admission hold), so the sweep observes the early
+    completion the class promotion bought without perturbing how the
+    scheduler batches the bulk traffic."""
+    t0 = time.perf_counter()
+    pending = {}
+    lats = {"interactive": [], "bulk": []}
+
+    def _sweep(only_interactive):
+        for t in sorted(pending):
+            if only_interactive and pending[t] != "interactive":
+                continue
+            res = svc.poll(t)
+            if res is not None:
+                jax.block_until_ready(res.read_vals)
+                lats[pending.pop(t)].append(time.perf_counter() - t0)
+
+    for batch, cls in stream:
+        pending[svc.submit(batch, latency_class=cls)] = cls
+        if any(c == "interactive" for c in pending.values()):
+            _sweep(only_interactive=True)
+    while pending:
+        _sweep(only_interactive=False)
+    svc.drain()
+    return lats
+
+
+# latency cells get a deep plan window (max_inflight=32 > stream length):
+# submission is then pure async dispatch — no backpressure join ever
+# blocks the submit loop — so a ticket's recorded completion time
+# reflects its DISPATCH position, exactly what latency classes reorder.
+# (The barriered cell joins per epoch by construction.)
+LAT_CELLS = [
+    ("barriered", dict(max_inflight=2, pipelined=False,
+                       admission_window=1)),
+    ("fifo_w4", dict(max_inflight=32, admission_window=4,
+                     reorder=False)),
+    ("ooo", dict(max_inflight=32, admission_window=8,
+                 max_inflight_execs=4)),
+]
+
+
+def bench_latency(rng, n_passes: int) -> list:
+    wl = make_ycsb(payload_words=2)
+    stream = _latency_stream(rng)
+    n_txn = sum(b.size for b, _ in stream)
+    rows = []
+    for name, kw in LAT_CELLS:
+        eng = BohmEngine(N_RECORDS, wl, ring_slots=RING_SLOTS)
+        svc = TxnService(eng, **kw)
+        _run_latency_pass(svc, stream)          # warmup: compiles shapes
+        best = None
+        for _ in range(n_passes):
+            t0 = time.perf_counter()
+            lats = _run_latency_pass(svc, stream)
+            dt = time.perf_counter() - t0
+            if best is None or dt < best[0]:
+                best = (dt, lats)
+        dt, lats = best
+        for cls in ("interactive", "bulk"):
+            ms = 1e3 * np.asarray(lats[cls])
+            rows.append({
+                "stream": "latency_class",
+                "mode": name,
+                "class": cls,
+                "n_tickets": len(ms),
+                "p50_ms": round(float(np.percentile(ms, 50)), 3),
+                "p99_ms": round(float(np.percentile(ms, 99)), 3),
+                "max_ms": round(float(ms.max()), 3),
+                "txn_s": round(n_txn / dt),
+                "class_promotions": svc.stats["class_promotions"],
+            })
     return rows
 
 
@@ -139,21 +298,37 @@ def trace_stream(kind: str = "mixed") -> None:
     """One traced pass over the stream (SEPARATE from the timed cells —
     tracing fences every span close, which would distort the timing):
     exports ``results/admission_trace.json``, a Chrome-trace view of the
-    scheduler's plan/exec/commit spans and merge/overlap/fallback
-    decisions."""
+    scheduler's plan/exec/commit spans and its merge / hop / chain /
+    class-promotion decisions."""
     rng = np.random.default_rng(47)
     wl = make_ycsb(payload_words=2)
     eng = BohmEngine(N_RECORDS, wl, ring_slots=RING_SLOTS,
                      tracer=PhaseTracer(enabled=True))
-    svc = TxnService(eng, max_inflight=2,
-                     admission_window=max(WINDOWS))
+    svc = TxnService(eng, **OOO_KW)
     svc.submit_many(_stream(rng, kind))
+    # a couple of interactive point batches behind the tail of the
+    # stream guarantee admission/class_promote fires in the trace
+    svc.submit(_span_batch(rng, 0, HOT_RANGE, ops=INTER_OPS, t=INTER_T),
+               latency_class="interactive")
+    # two merge-INCOMPATIBLE (different widths) but commuting batches at
+    # the tail form adjacent singleton epochs that dispatch as one exec
+    # chain — admission/chain_depth fires deterministically
+    width = (N_RECORDS - HOT_RANGE) // MIX_STRIPES
+    lo = HOT_RANGE + 3 * width
+    svc.submit_many([_span_batch(rng, lo, lo + width, ops=5),
+                     _span_batch(rng, lo + width, lo + 2 * width, ops=7)])
     svc.drain()
     eng.gc_sweep()
     path = RESULTS_DIR / "admission_trace.json"
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     eng.tracer.export(path)
-    counts = validate_chrome_trace(json.loads(path.read_text()))
+    trace = json.loads(path.read_text())
+    counts = validate_chrome_trace(trace)
+    names = {e.get("name") for e in trace.get("traceEvents", [])}
+    missing = {"admission/hop", "admission/chain_depth",
+               "admission/class_promote"} - names
+    if missing:
+        raise AssertionError(f"scheduler instants missing: {missing}")
     print(f"trace: {path} ({counts['spans']} spans, "
           f"{counts['instants']} instants)")
 
@@ -165,9 +340,11 @@ def run(quick: bool = False, trace: bool = False) -> list:
     for kind in ("disjoint_cold", "mixed"):
         rows.extend(bench_stream(kind, rng, n_passes))
     write_csv("admission", rows)
+    lat_rows = bench_latency(rng, max(2, n_passes - 1))
+    write_csv("admission_latency", lat_rows)
     if trace:
         trace_stream()
-    return rows
+    return rows + lat_rows
 
 
 if __name__ == "__main__":

@@ -49,18 +49,21 @@ def _workload() -> Workload:
 N_PARTS = 8
 
 
-def _batch(rng):
+def _batch(rng, part=None, ops=OPS, t=T):
     """Partition-local batches: each batch's keys stay inside one of
     ``N_PARTS`` record ranges, so the admission window sees disjoint
-    batches (merge / overlap) AND same-partition collisions (conflict
-    fallback) — the trace shows every decision kind."""
-    part = int(rng.integers(0, N_PARTS))
+    batches (merge / overlap / hop) AND same-partition collisions
+    (conflict fallback) — the trace shows every decision kind.
+    Partition 0 is RESERVED for the interactive point batch, so its
+    queue jump is always hop-legal."""
+    if part is None:
+        part = int(rng.integers(1, N_PARTS))
     lo, hi = part * R // N_PARTS, (part + 1) * R // N_PARTS
-    reads = rng.integers(lo, hi, (T, OPS))
-    wmask = rng.random((T, OPS)) < 0.5
+    reads = rng.integers(lo, hi, (t, ops))
+    wmask = rng.random((t, ops)) < 0.5
     writes = np.where(wmask, reads, -1)
-    types = rng.integers(0, 2, T)
-    args = rng.integers(1, 5, (T, 1))
+    types = rng.integers(0, 2, t)
+    args = rng.integers(1, 5, (t, 1))
     return make_batch(reads, writes, types, args)
 
 
@@ -72,6 +75,17 @@ def run(n_batches: int, spill: bool) -> dict:
     svc = TxnService(eng, max_inflight=2, admission_window=4)
     rng = np.random.default_rng(0)
     tickets = svc.submit_many([_batch(rng) for _ in range(n_batches)])
+    # deterministic scheduler-decision tail: two same-partition bulk
+    # batches are HELD (they conflict, so neither merges), then an
+    # interactive point batch on the reserved partition jumps them
+    # (admission/hop + admission/class_promote), and two commuting
+    # width-mismatched batches dispatch as one exec chain
+    # (admission/chain_depth)
+    tickets += svc.submit_many([_batch(rng, part=3), _batch(rng, part=3)])
+    tickets.append(svc.submit(_batch(rng, part=0, ops=2, t=16),
+                              latency_class="interactive"))
+    tickets += svc.submit_many([_batch(rng, part=1, ops=3),
+                                _batch(rng, part=2, ops=5)])
     snap = svc.begin_snapshot()
     for t in tickets:
         svc.wait(t)
@@ -149,6 +163,10 @@ def main():
         assert counts["spans"] > 0, "trace exported no spans"
         assert any(e["ph"] == "i" for e in trace["traceEvents"]), \
             "trace exported no admission-decision instants"
+        names = {e.get("name") for e in trace["traceEvents"]}
+        missing = {"admission/hop", "admission/chain_depth",
+                   "admission/class_promote"} - names
+        assert not missing, f"scheduler instants missing: {missing}"
         print(f"trace valid: {counts}")
 
 

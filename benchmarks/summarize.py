@@ -30,9 +30,17 @@ BENCH_TABLES = {
     "pipeline": ("pipeline — pipelined vs barriered (Fig 3 overlap)",
                  ["n_shards", "mode", "substrate", "txn_s",
                   "pipelined_over_barriered"]),
-    "admission": ("admission — conflict-aware scheduler vs barriered",
+    "admission": ("admission — out-of-order scheduler vs FIFO-prefix "
+                  "vs barriered",
                   ["stream", "mode", "admission_window", "txn_s",
-                   "vs_barriered", "merged_batches", "overlapped_execs"]),
+                   "vs_barriered", "vs_fifo4", "merged_batches",
+                   "hopped_batches", "overlapped_execs",
+                   "chain_depth_max"]),
+    "admission_latency": ("admission latency classes — per-class ticket "
+                          "latency (interactive jumps bulk)",
+                          ["mode", "class", "n_tickets", "p50_ms",
+                           "p99_ms", "max_ms", "txn_s",
+                           "class_promotions"]),
     "spill": ("spill — hierarchical storage found-rate at equal budget",
               ["config", "found_rate", "found_vs_drop", "txn_s",
                "txn_s_vs_drop", "spill_admitted", "spill_dropped",

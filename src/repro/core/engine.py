@@ -254,7 +254,7 @@ class BohmEngine:
                 plan, batch, self.store, w_data, wm, None, pins)
             sp.fence(self.store.base)
         metrics = dict(exec_metrics, **ring_metrics)
-        self._ts_next += batch.size
+        self.claim_ts_window(batch.size)
         self.record_commit_metrics(metrics, n_txns=batch.size)
         return read_vals, metrics
 
@@ -317,6 +317,20 @@ class BohmEngine:
         Condition-3 barrier GC as the degenerate case)."""
         return min([s.ts for s in self._snapshots.values()]
                    + [self._ts_next])
+
+    def claim_ts_window(self, n_txns: int) -> Tuple[int, int]:
+        """Reserve the next ``n_txns`` global timestamps and return the
+        half-open window ``(lo, lo + n_txns)``. This is Bohm's layered ts
+        assignment as an explicit API: the scheduler claims windows in
+        DISPATCH order (which, under out-of-order admission, may differ
+        from submission order) and threads them through
+        ``commit(..., ts_window=)`` so the store's timestamp accounting
+        follows the dispatched schedule. Claim only after capturing this
+        epoch's ``watermark()``/``pin_array()`` — the watermark reads the
+        un-advanced mirror."""
+        lo = self._ts_next
+        self._ts_next += n_txns
+        return lo, lo + n_txns
 
     def pin_array(self) -> jax.Array:
         """Registered snapshot pin timestamps as a device vector, sorted

@@ -1,10 +1,13 @@
 """DEPRECATED shim — the version-ring subsystem lives in ``repro.store``.
 
-Import from ``repro.store`` (or the submodules ``repro.store.ring`` /
-``repro.store.sharded`` / ``repro.store.spill`` / ``repro.store.policy``)
-instead.  This module is a pure re-export kept for one deprecation cycle;
-it defines nothing of its own — in particular the ``INF_TS`` sentinel has
-exactly one home, ``repro.store.ring`` — and warns on import.
+The per-record K-slot version ring (init/commit/gather/occupancy and the
+``INF_TS`` open-version sentinel) moved to ``repro.store.ring`` in PR 2;
+record-partitioned sharding, the spill tier and the adaptive-K policy
+grew alongside it as ``repro.store.sharded`` / ``repro.store.spill`` /
+``repro.store.policy``.  This module is a pure re-export kept for one
+deprecation cycle; it defines nothing of its own — in particular the
+``INF_TS`` sentinel has exactly one home, ``repro.store.ring`` — and
+warns on import.
 """
 import warnings
 
@@ -12,7 +15,9 @@ from repro.store.ring import (INF_TS, VersionRing, commit_versions,
                               gather_windows, init_ring, ring_occupancy)
 
 warnings.warn(
-    "repro.core.versions is deprecated; import from repro.store instead",
+    "repro.core.versions is deprecated; import INF_TS, VersionRing, "
+    "commit_versions, gather_windows, init_ring and ring_occupancy from "
+    "repro.store.ring (re-exported by repro.store) instead",
     DeprecationWarning, stacklevel=2)
 
 __all__ = ["INF_TS", "VersionRing", "commit_versions", "gather_windows",

@@ -86,17 +86,30 @@ def engine_health(engine) -> Dict[str, object]:
 
 
 def service_health(service) -> Dict[str, object]:
-    """Engine health plus the scheduler plane: queue depths and the
-    admission window's observed occupancy (``service`` is a
+    """Engine health plus the scheduler plane: queue depths, the
+    admission window's observed occupancy, and the out-of-order
+    scheduler gauges — max queued-ticket age and hop saturation show a
+    starving batch long before throughput does (``service`` is a
     ``repro.service.TxnService``)."""
     health = engine_health(service.engine)
+    now = time.monotonic()
+    queued = list(service._admission)
     health.update({
-        "admission_queue_depth": len(service._admission),
+        "admission_queue_depth": len(queued),
         "planned_epochs": len(service._planned),
         "inflight_epochs": len(service._inflight),
         "unclaimed_results": len(service._results),
         "admission_window": service.admission_window,
         "admission_window_occupancy_max":
             service.stats["admission_window_occupancy"],
+        # scheduler_health: the reorder plane's live gauges
+        "scheduler_max_ticket_age_s": (
+            round(max(now - a.t_admit for a in queued), 6)
+            if queued else 0.0),
+        "scheduler_max_queued_hops": (
+            max(a.hops for a in queued) if queued else 0),
+        "scheduler_hopped_batches": service.stats["hopped_batches"],
+        "scheduler_class_promotions": service.stats["class_promotions"],
+        "scheduler_chain_depth_max": service.stats["chain_depth_max"],
     })
     return health

@@ -1,4 +1,4 @@
-"""repro.service — conflict-aware transaction scheduling on the engine.
+"""repro.service — out-of-order transaction scheduling on the engine.
 
 ``TxnService`` keeps >= 2 batches in flight: CC(b+1) is dispatched while
 exec(b) runs (the paper's two-thread-pool overlap, Fig. 3), with an
@@ -6,9 +6,13 @@ admission queue, submit/poll/wait tickets, snapshot-aware watermarks, and
 a barriered fallback mode for A/B measurement. With
 ``admission_window > 1`` the queue becomes a conflict-aware window:
 queued batches with pairwise-disjoint record footprints merge into one CC
-epoch, adjacent disjoint epochs overlap their exec phases ahead of the
-deferred commit, and conflicting batches fall back to the paper's batch
-barrier (benchmarks/admission.py quantifies the win).
+epoch, later batches HOP over a conflicting one they commute with
+(timestamps re-derived from dispatch order — Bohm's layered ts
+assignment makes the result serial-equivalent), interactive batches jump
+bulk scans under a ``max_hops`` starvation bound, and epochs disjoint
+from all uncommitted predecessors chain their execs up to
+``max_inflight_execs`` deep (benchmarks/admission.py quantifies the
+win; ``reorder=False`` restores the PR-3 FIFO-prefix baseline).
 """
 from repro.service.txn_service import BatchResult, TxnService
 

@@ -1,57 +1,77 @@
-"""TxnService: the conflict-aware batch scheduler on top of ``BohmEngine``.
+"""TxnService: the out-of-order batch scheduler on top of ``BohmEngine``.
 
 The paper runs two thread pools so the CC phase of batch b+1 overlaps the
 execution of batch b (§3, Fig. 3) and keeps ONE synchronisation point: the
 batch barrier between exec epochs. The engine's phase graph (plan / exec /
-commit as separate jitted dispatches) lets the scheduler go further:
-nothing forces *every* pair of adjacent batches through the barrier —
-batches whose record footprints are disjoint commute, so
+commit as separate jitted dispatches) lets the scheduler go further.
+Because Bohm assigns timestamps in a dedicated layer BEFORE execution,
+the admission layer is free to pick the order: any permutation that only
+swaps batches with disjoint (write vs read∪write) footprints commutes,
+the plan phase simply assigns the reordered ts windows, and the result
+is provably serial-equivalent — byte-identical reads per ticket.
 
-  admission window  ``submit`` enqueues a batch (plus its read/write
-                    record bitset, computed in one pass at admission) and
-                    returns a ticket; up to ``admission_window`` queued
-                    batches are scanned per scheduling decision;
-  batch merging     a FIFO-prefix chain of queued batches whose write-sets
-                    are pairwise disjoint from each other's read∪write
-                    sets merges into ONE CC epoch: one plan, one exec
-                    wavefront, one commit over the concatenated batch —
-                    provably identical to running them back-to-back
-                    (merging preserves submission order, so every global
-                    timestamp is unchanged);
-  exec-exec overlap when two adjacent epochs' footprints are disjoint,
-                    exec(b+1) is dispatched against the SAME store
-                    snapshot BEFORE commit(b) — the deferred commit then
-                    lands in ticket order with an explicit ts window, so
-                    timestamps and watermark GC are exactly sequential;
-  conflict fallback the first conflicting batch ends the merge chain and
-                    takes the ordinary barriered path: commit(b) is the
-                    data dependency of exec(b+1), the paper's barrier;
+  admission window  ``submit(batch, latency_class=...)`` enqueues a batch
+                    (plus its read/write record bitset + uint64 signature,
+                    computed in one pass at admission) and returns a
+                    ticket; up to ``admission_window`` queued batches are
+                    scanned per scheduling decision;
+  epoch formation   instead of stopping at the first conflicting batch
+    (reordering)    (PR 3's FIFO-prefix merge), the scanner *hops* it:
+                    any later batch that commutes with every batch left
+                    behind may join the epoch. Global timestamps are
+                    re-derived from the DISPATCH order (``dispatch_log``)
+                    and threaded through ``commit(..., ts_window=)``;
+                    per-ticket results are re-associated so poll / wait /
+                    drain still resolve in submission order;
+  latency classes   ``latency_class="interactive"`` batches are scanned
+                    first, so point txns jump the queue past bulk scans
+                    they commute with (``admission/class_promote``);
+  starvation bound  every jumped batch's hop counter is bumped; once a
+                    batch reaches ``max_hops`` it becomes a barrier — no
+                    later batch may hop it again, so perpetually
+                    conflicting work always drains;
+  signature bucket  disjointness tests run the one-word block-signature
+                    certificate first (``plan.signatures_disjoint``):
+                    disjoint-bucket pairs short-circuit before the
+                    [R/64] word scan, so the O(window²) scan is
+                    near-O(window) on striped traffic;
+  exec chaining     epochs whose footprints are disjoint from EVERY
+                    uncommitted predecessor dispatch exec immediately
+                    against the same store snapshot — a dependency-DAG
+                    chain up to ``max_inflight_execs`` deep (PR 3's
+                    2-deep overlap is the ``max_inflight_execs=2`` case);
+                    the deferred commits then land in dispatch order with
+                    explicit ts windows, so timestamps and watermark GC
+                    are exactly the dispatch-order sequential schedule's;
   CC runs ahead     plans for up to ``max_inflight`` epochs are dispatched
                     while earlier execs are in flight (CC has no store
                     dependency — the PR-2 pipelining, unchanged);
   backpressure      at most ``max_inflight`` exec steps may be unrealised;
                     beyond that the oldest is joined before admitting more;
   snapshots         ``begin_snapshot`` first flushes the admission window
-                    (so the pin covers every batch submitted so far, same
-                    as pinning between two sequential ``run_batch`` calls)
-                    and then pins the watermark. Merged epochs commit
-                    through one barrier and so *defer* the intermediate GC
-                    sweeps of a batch-per-barrier schedule — those sweeps
-                    only touch versions invisible to every legal reader,
-                    so snapshot reads, the head store and per-ticket
-                    results stay byte-identical, and a single
-                    ``engine.gc_sweep()`` restores the canonical ring
-                    state (property-tested in tests/test_service.py).
+                    (so the pin covers every batch submitted so far) and
+                    then pins the watermark; no epoch merges ACROSS a
+                    pin, and hopped schedules only commute disjoint
+                    batches, so the pinned snapshot reads exactly what
+                    the submission-order schedule would expose.
 
-``admission_window=1`` (default) degrades to the FIFO pipelined schedule
-of PR 2; ``pipelined=False`` additionally joins the host after every
-epoch — the barriered baseline the admission benchmark compares against.
+Correctness model: a hop swaps only commuting batches, so per-ticket read
+values and the head store equal the submission-order sequential schedule;
+version begin/end timestamps in the rings follow the dispatch order, so
+ring state is byte-identical to sequential ``run_batch`` calls in
+``dispatch_log`` order (property-tested in tests/test_scheduler_props.py).
+
+``reorder=False`` restores PR 3's FIFO-prefix merge (the benchmark
+baseline); ``admission_window=1`` (default) degrades to the FIFO
+pipelined schedule of PR 2; ``pipelined=False`` additionally joins the
+host after every epoch — the barriered baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
-from typing import Deque, Dict, Iterable, List, Optional
+from typing import Deque, Dict, Iterable, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +84,9 @@ from repro.core.plan import (MAX_BATCH_TXNS, BatchFootprint,
                              merge_batches, merge_footprints)
 from repro.core.txn import TxnBatch
 from repro.obs import service_health
+
+# latency classes, lower scans first ("interactive" jumps "bulk")
+LATENCY_CLASSES = {"interactive": 0, "bulk": 1}
 
 
 def _popcount(bits) -> int:
@@ -88,6 +111,9 @@ class _Admitted:
     ticket: int
     batch: TxnBatch
     footprint: Optional[BatchFootprint]
+    latency_class: int = 1          # LATENCY_CLASSES rank
+    hops: int = 0                   # times later batches jumped this one
+    t_admit: float = 0.0            # monotonic admission time (health)
 
 
 @dataclasses.dataclass
@@ -109,15 +135,24 @@ class _Planned:
 
 class TxnService:
     def __init__(self, engine: BohmEngine, max_inflight: int = 2,
-                 pipelined: bool = True, admission_window: int = 1):
+                 pipelined: bool = True, admission_window: int = 1,
+                 reorder: bool = True, max_inflight_execs: int = 2,
+                 max_hops: int = 4):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         if admission_window < 1:
             raise ValueError("admission_window must be >= 1")
+        if max_inflight_execs < 1:
+            raise ValueError("max_inflight_execs must be >= 1")
+        if max_hops < 1:
+            raise ValueError("max_hops must be >= 1")
         self.engine = engine
         self.max_inflight = max_inflight
         self.pipelined = pipelined
         self.admission_window = admission_window
+        self.reorder = reorder
+        self.max_inflight_execs = max_inflight_execs
+        self.max_hops = max_hops
         self._next_ticket = 0
         self._admission: Deque[_Admitted] = deque()
         self._planned: Deque[_Planned] = deque()
@@ -126,6 +161,10 @@ class TxnService:
         # max_inflight bound counts epochs, not batches
         self._inflight: Deque[List[int]] = deque()
         self._results: Dict[int, BatchResult] = {}
+        # epochs in dispatch (= timestamp) order, each a ticket list in
+        # concatenation order: sequential run_batch calls in this order
+        # reproduce the store byte-for-byte (the reordering oracle)
+        self.dispatch_log: List[List[int]] = []
         # stats live in the engine's registry under the "service/"
         # namespace — same keys / same mutation sites as the legacy dict,
         # but visible to snapshot()/obs_report alongside engine counters
@@ -136,44 +175,61 @@ class TxnService:
                     "backpressure_joins",
                     # scheduler decisions (conflict-aware admission):
                     # merged_batches = batches folded into a preceding
-                    # epoch; overlapped_execs = exec(b+1) dispatched
-                    # before commit(b); admission_window_occupancy =
-                    # max batches seen by one window scan
+                    # epoch; overlapped_execs = exec dispatched before a
+                    # pending commit; hopped_batches = hop events (a
+                    # queued batch jumped by a later one);
+                    # class_promotions = interactive batches that jumped
+                    # >= 1 earlier bulk batch; chain_depth_max = deepest
+                    # exec chain dispatched against one store snapshot
                     "merged_batches", "overlapped_execs",
-                    "admission_window_occupancy"):
+                    "hopped_batches", "class_promotions",
+                    "chain_depth_max", "admission_window_occupancy"):
             self.stats[key] = 0
 
     @property
     def conflict_aware(self) -> bool:
         return self.admission_window > 1
 
+    @property
+    def out_of_order(self) -> bool:
+        return self.reorder and self.conflict_aware
+
     # -- client API --------------------------------------------------------
-    def submit(self, batch: TxnBatch) -> int:
+    def submit(self, batch: TxnBatch,
+               latency_class: Union[str, int] = "bulk") -> int:
         """Admit one update batch; returns a ticket for ``poll``/``wait``.
         Dispatch is non-blocking. With ``admission_window > 1`` a batch
         may be HELD in the admission queue until the window fills (or a
         flush point — poll/wait/drain/snapshot — arrives), trading a
-        little admission latency for merge opportunities."""
-        ticket = self._admit(batch)
+        little admission latency for merge opportunities; an interactive
+        batch anywhere in the queue disables the hold."""
+        ticket = self._admit(batch, latency_class)
         self._pump()
         return ticket
 
-    def submit_many(self, batches: Iterable[TxnBatch]) -> List[int]:
+    def submit_many(self, batches: Iterable[TxnBatch],
+                    latency_class: Union[str, int] = "bulk") -> List[int]:
         """Admit a burst: everything is enqueued before the pump runs, so
         the window scan sees the full burst and the CC plan window fills
         to ``max_inflight`` ahead of the first exec join."""
-        tickets = [self._admit(b) for b in batches]
+        tickets = [self._admit(b, latency_class) for b in batches]
         self._pump()
         return tickets
 
-    def _admit(self, batch: TxnBatch) -> int:
+    def _admit(self, batch: TxnBatch,
+               latency_class: Union[str, int]) -> int:
         if batch.size > MAX_BATCH_TXNS:
             raise ValueError("composite uint32 keys require T <= 2^12")
+        rank = LATENCY_CLASSES.get(latency_class, latency_class) \
+            if isinstance(latency_class, str) else int(latency_class)
+        if not isinstance(rank, int):
+            raise ValueError(f"unknown latency_class {latency_class!r}")
         ticket = self._next_ticket
         self._next_ticket += 1
         fp = batch_footprint(batch, self.engine.num_records) \
             if self.conflict_aware else None
-        self._admission.append(_Admitted(ticket, batch, fp))
+        self._admission.append(_Admitted(ticket, batch, fp, rank,
+                                         t_admit=time.monotonic()))
         self.stats["submitted"] += 1
         return ticket
 
@@ -211,8 +267,9 @@ class TxnService:
         self._results.clear()
 
     def health(self) -> Dict[str, object]:
-        """Engine MVCC health gauges plus scheduler queue depths and
-        admission-window occupancy (synchronises — diagnostic API)."""
+        """Engine MVCC health gauges plus scheduler queue depths, hop /
+        promotion counters and max queued-ticket age (synchronises —
+        diagnostic API)."""
         return service_health(self)
 
     # -- snapshot API (delegates to the engine; correctness notes) ---------
@@ -223,7 +280,7 @@ class TxnService:
         (advancing the engine's plan-time timestamp mirror) so the pin
         lands after them, and no epoch ever merges ACROSS a pin — the
         pin is an epoch boundary, which keeps each epoch's plan-time
-        watermark exactly the sequential schedule's."""
+        watermark exactly the (dispatch-order) sequential schedule's."""
         self._pump(flush=True)
         return self.engine.begin_snapshot(ts)
 
@@ -243,11 +300,10 @@ class TxnService:
         self._pump(flush=ts is None)
         return self.engine.run_readonly_batch(batch, ts)
 
-    # -- pump: merge + plan ahead, exec (maybe overlapped), bound the queue -
+    # -- pump: form + plan ahead, chain execs, bound the queue -------------
     def _pump(self, flush: bool = False) -> None:
         """Interleaved dispatch: form epochs from the admission window and
-        keep the plan window full, then exec the oldest epoch — with
-        exec(b+1) jumping ahead of commit(b) when footprints allow.
+        keep the plan window full, then dispatch the next exec chain.
         Everything here is non-blocking dispatch except the explicit
         barriered mode and backpressure joins. ``flush`` forces held
         batches through (flush points: poll/wait/drain/snapshot/readonly);
@@ -255,7 +311,7 @@ class TxnService:
         waiting for merge candidates."""
         while True:
             progressed = self._fill_plan_window(flush)
-            if self._exec_ready():
+            if self._dispatch_chain():
                 progressed = True
             # backpressure INSIDE the dispatch loop: a burst of submits
             # never enqueues more than max_inflight unrealised exec steps
@@ -278,46 +334,57 @@ class TxnService:
     def _fill_plan_window(self, flush: bool = False) -> bool:
         """CC phase runs ahead: form + plan epochs for admitted batches
         while earlier exec steps are still in flight on the device
-        queue."""
+        queue. Timestamps are claimed per epoch in dispatch order — this
+        is where a hopped schedule's tickets are renumbered."""
         eng = self.engine
         progressed = False
         while self._admission and len(self._planned) < self.max_inflight:
             if (self.conflict_aware and not flush
-                    and len(self._admission) < self.admission_window):
+                    and len(self._admission) < self.admission_window
+                    and not any(a.latency_class == 0
+                                for a in self._admission)):
                 break        # hold: wait for merge candidates
             tickets, sizes, batch, fp = self._pop_epoch()
-            ts_base = eng._ts_next
-            # the watermark (and pin set) the sequential schedule would
-            # use for this epoch, captured at plan time (eng._ts_next ==
-            # this epoch's ts base here) so pipelining cannot over-reclaim
-            # and spill admission sees exactly the sequential pin set —
-            # byte-identical GC to the barriered schedule. Pins created
-            # later land at >= the last planned epoch's final ts, where
-            # they cannot stab anything this epoch evicts, so missing
-            # them is safe (see repro/store/ring.py liveness notes).
+            # the watermark (and pin set) the dispatch-order sequential
+            # schedule would use for this epoch, captured at plan time
+            # (the ts mirror equals this epoch's ts base here) so
+            # pipelining cannot over-reclaim and spill admission sees
+            # exactly the sequential pin set — byte-identical GC to the
+            # barriered schedule. Pins created later land at >= the last
+            # planned epoch's final ts, where they cannot stab anything
+            # this epoch evicts, so missing them is safe (see
+            # repro/store/ring.py liveness notes).
             wm = eng.watermark()
             pins = eng.pin_array()
+            ts_base, _ = eng.claim_ts_window(batch.size)
             with self.tracer.span("plan_phase", txns=batch.size,
                                   epoch_batches=len(tickets)) as sp:
                 plan = sp.fence(
                     eng._plan(batch, jnp.asarray(ts_base, jnp.int32)))
-            eng._ts_next += batch.size
             self._planned.append(_Planned(tickets, sizes, batch, fp,
                                           plan, ts_base, wm, pins))
+            self.dispatch_log.append(list(tickets))
             self.stats["planned_ahead_max"] = max(
                 self.stats["planned_ahead_max"], len(self._planned))
             progressed = True
         return progressed
 
+    # -- epoch formation ---------------------------------------------------
     def _pop_epoch(self):
-        """Scan up to ``admission_window`` queued batches (FIFO): start
-        from the head, fold in each successor whose footprint is disjoint
-        from the epoch built so far, stop at the first conflict (merging
-        past it would reorder commits). Returns (tickets, sizes, batch,
-        footprint)."""
+        """Form the next CC epoch from the admission queue. Returns
+        (tickets, sizes, batch, footprint) and removes the members."""
         self.stats["admission_window_occupancy"] = max(
             self.stats["admission_window_occupancy"],
             min(len(self._admission), self.admission_window))
+        if self.out_of_order:
+            return self._form_epoch_ooo()
+        return self._form_epoch_fifo()
+
+    def _form_epoch_fifo(self):
+        """PR 3's FIFO-prefix merge (``reorder=False`` / baseline): start
+        from the head, fold in each successor whose footprint is disjoint
+        from the epoch built so far, stop at the first conflict (merging
+        past it would reorder commits)."""
         head = self._admission.popleft()
         tickets, sizes = [head.ticket], [head.batch.size]
         batch, fp = head.batch, head.footprint
@@ -348,62 +415,182 @@ class TxnService:
             scanned += 1
         return tickets, sizes, batch, fp
 
+    def _form_epoch_ooo(self):
+        """Out-of-order epoch formation over the admission window.
+
+        Selection invariant: a batch may join the epoch only if it (a)
+        commutes with the epoch built so far (merge condition), and (b)
+        commutes with EVERY earlier-submitted batch left in the queue
+        (hop condition) — so the dispatched schedule only ever swaps
+        commuting batches and per-ticket outputs stay byte-identical to
+        submission order. A queued batch with ``hops >= max_hops`` is a
+        barrier: nothing may hop it, so it seeds one of the next epochs
+        (starvation bound). Scan priority: interactive class first, then
+        submission order — the objective is the WIDEST legal epoch
+        (dispatch count dominates chain overlap on every measured
+        stream), so selection is a greedy multi-pass fixpoint."""
+        adm = self._admission
+        window = [adm[i] for i in range(min(len(adm),
+                                           self.admission_window))]
+        n = len(window)
+        fps = [a.footprint for a in window]
+        order = sorted(range(n),
+                       key=lambda i: (window[i].latency_class, i))
+        sel: List[int] = []          # selected window positions
+        sel_set: set = set()
+        ef: Optional[BatchFootprint] = None
+        epoch_size = 0
+        changed = True
+        while changed:               # multi-pass: a selection can unblock
+            changed = False          # candidates behind a barrier
+            for i in order:
+                if i in sel_set:
+                    continue
+                a = window[i]
+                if sel:
+                    head = window[sel[0]]
+                    if not self._widths_match(head.batch, a.batch):
+                        continue
+                    if epoch_size + a.batch.size > MAX_BATCH_TXNS:
+                        continue
+                    # disjointness tests run the one-word signature
+                    # certificate first (plan.signatures_disjoint) —
+                    # disjoint-bucket pairs never touch the word scan
+                    if footprints_conflict(ef, a.footprint):
+                        continue
+                # hop condition: commutes with every earlier-submitted
+                # batch left behind, none of which is hop-saturated
+                legal = True
+                for j in range(i):
+                    if j in sel_set:
+                        continue
+                    if (window[j].hops >= self.max_hops
+                            or footprints_conflict(a.footprint, fps[j])):
+                        legal = False
+                        break
+                if not legal:
+                    continue
+                sel.append(i)
+                sel_set.add(i)
+                ef = a.footprint if ef is None \
+                    else merge_footprints(ef, a.footprint)
+                epoch_size += a.batch.size
+                changed = True
+        sel.sort()   # concatenate members in submission order
+        # hop + class-promotion accounting for everything jumped over
+        jumped = [j for j in range(max(sel))
+                  if j not in sel_set] if sel else []
+        for j in jumped:
+            window[j].hops += 1
+        if jumped:
+            self.stats["hopped_batches"] += len(jumped)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admission/hop", jumped=len(jumped),
+                    epoch_batches=len(sel),
+                    max_hops_queued=max(window[j].hops for j in jumped))
+            promos = sum(
+                1 for i in sel if window[i].latency_class == 0
+                and any(j < i and window[j].latency_class > 0
+                        for j in jumped))
+            if promos:
+                self.stats["class_promotions"] += promos
+                if self.tracer.enabled:
+                    self.tracer.instant("admission/class_promote",
+                                        promoted=promos,
+                                        jumped=len(jumped))
+        # build the epoch and drop members from the queue
+        members = [window[i] for i in sel]
+        head, rest = members[0], members[1:]
+        tickets, sizes = [head.ticket], [head.batch.size]
+        batch, fp = head.batch, head.footprint
+        for m in rest:
+            batch = merge_batches(batch, m.batch)
+            fp = merge_footprints(fp, m.footprint)
+            tickets.append(m.ticket)
+            sizes.append(m.batch.size)
+            self.stats["merged_batches"] += 1
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admission_merge",
+                    epoch_batches=len(tickets),
+                    merged_records=_popcount(m.footprint.rw_bits),
+                    epoch_records=_popcount(fp.rw_bits))
+        self._admission = deque(
+            [adm[i] for i in range(len(adm)) if i not in sel_set])
+        return tickets, sizes, batch, fp
+
     @staticmethod
-    def _can_merge(batch: TxnBatch, fp: Optional[BatchFootprint],
+    def _widths_match(a: TxnBatch, b: TxnBatch) -> bool:
+        return (a.n_read, a.n_write, a.args.shape[1:]) == \
+            (b.n_read, b.n_write, b.args.shape[1:])
+
+    @classmethod
+    def _can_merge(cls, batch: TxnBatch, fp: Optional[BatchFootprint],
                    nxt: _Admitted) -> bool:
         if fp is None or nxt.footprint is None:
             return False
-        if (batch.n_read, batch.n_write, batch.args.shape[1:]) != \
-                (nxt.batch.n_read, nxt.batch.n_write,
-                 nxt.batch.args.shape[1:]):
+        if not cls._widths_match(batch, nxt.batch):
             return False
         if batch.size + nxt.batch.size > MAX_BATCH_TXNS:
             return False
         return not footprints_conflict(fp, nxt.footprint)
 
-    def _exec_ready(self) -> bool:
-        """Execution in ticket order: each commit consumes the previous
+    # -- exec + commit -----------------------------------------------------
+    def _dispatch_chain(self) -> bool:
+        """Execution in dispatch order: each commit consumes the previous
         commit's store (the batch barrier as a device data dependency) —
-        but when the NEXT planned epoch's footprint is disjoint from this
-        one's, its exec is dispatched against the same store snapshot
-        BEFORE this epoch's commit (exec-exec overlap; both commits then
-        land in order with their plan-time watermarks and ts windows,
-        byte-identical to the barriered schedule)."""
+        but an epoch whose footprint is disjoint from ALL uncommitted
+        predecessors dispatches exec against the same store snapshot
+        BEFORE those commits land: a dependency-DAG chain bounded by
+        ``max_inflight_execs``. The deferred commits then land in
+        dispatch order with their plan-time watermarks and ts windows,
+        byte-identical to the barriered (dispatch-order) schedule."""
         if not self._planned:
             return False
-        eng = self.engine
         e1 = self._planned.popleft()
-        with self.tracer.span("exec_phase", txns=e1.size) as sp:
-            w1, r1, m1 = eng._exec(e1.plan, e1.batch, eng.store)
-            sp.fence(r1)
-        e2 = None
-        if (self.pipelined and self.conflict_aware and self._planned
-                and e1.footprint is not None
-                and self._planned[0].footprint is not None
-                and not footprints_conflict(e1.footprint,
-                                            self._planned[0].footprint)):
-            e2 = self._planned.popleft()
-            with self.tracer.span("exec_phase", txns=e2.size,
-                                  overlapped=True) as sp:
-                w2, r2, m2 = eng._exec(e2.plan, e2.batch, eng.store)
-                sp.fence(r2)
+        chain = [(e1, self._exec_epoch(e1))]
+        chain_fp = e1.footprint
+        while (self.pipelined and self.conflict_aware and self._planned
+               and len(chain) < self.max_inflight_execs
+               and chain_fp is not None
+               and self._planned[0].footprint is not None
+               and not footprints_conflict(chain_fp,
+                                           self._planned[0].footprint)):
+            e = self._planned.popleft()
+            chain.append((e, self._exec_epoch(e, overlapped=True)))
+            chain_fp = merge_footprints(chain_fp, e.footprint)
             self.stats["overlapped_execs"] += 1
             if self.tracer.enabled:
                 self.tracer.instant(
                     "admission_overlap",
-                    epoch1_txns=e1.size, epoch2_txns=e2.size,
-                    epoch1_records=_popcount(e1.footprint.rw_bits),
-                    epoch2_records=_popcount(e2.footprint.rw_bits))
-        self._commit_epoch(e1, w1, r1, m1)
-        if e2 is not None:
-            self._commit_epoch(e2, w2, r2, m2)
+                    epoch1_txns=e1.size, epoch2_txns=e.size,
+                    chain_depth=len(chain),
+                    epoch_records=_popcount(e.footprint.rw_bits))
+        if len(chain) > 1:
+            self.stats["chain_depth_max"] = max(
+                self.stats["chain_depth_max"], len(chain))
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    "admission/chain_depth", depth=len(chain),
+                    txns=sum(e.size for e, _ in chain))
+        for e, (w, r, m) in chain:
+            self._commit_epoch(e, w, r, m)
         return True
+
+    def _exec_epoch(self, e: _Planned, overlapped: bool = False):
+        kwargs = {"overlapped": True} if overlapped else {}
+        with self.tracer.span("exec_phase", txns=e.size, **kwargs) as sp:
+            w, r, m = self.engine._exec(e.plan, e.batch, self.engine.store)
+            sp.fence(r)
+        return w, r, m
 
     def _commit_epoch(self, e: _Planned, w_data, read_vals,
                       exec_metrics) -> None:
         """Deferred-commit half of an epoch: explicit ts window so the
-        store's timestamp accounting is exactly sequential, then fan the
-        epoch outputs back out to per-ticket results."""
+        store's timestamp accounting is exactly sequential (in dispatch
+        order), then fan the epoch outputs back out to per-ticket
+        results."""
         eng = self.engine
         window = (jnp.asarray(e.ts_base, jnp.int32),
                   jnp.asarray(e.ts_base + e.size, jnp.int32))

@@ -271,7 +271,8 @@ def test_service_and_scheduler_stats_namespaces():
     svc = TxnService(eng, max_inflight=2, admission_window=2)
     assert list(svc.stats) == ["submitted", "planned_ahead_max",
                                "backpressure_joins", "merged_batches",
-                               "overlapped_execs",
+                               "overlapped_execs", "hopped_batches",
+                               "class_promotions", "chain_depth_max",
                                "admission_window_occupancy"]
     svc.submit(_random_batch(0))
     svc.drain()

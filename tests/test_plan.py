@@ -148,6 +148,58 @@ def test_footprints_conflict_directions():
     assert not footprints_conflict(r1, r2)
 
 
+def test_footprint_signatures_certify_disjointness():
+    """The uint64 block signature: bit j set <=> some touched 64-record
+    block w has w % 64 == j. Disjoint signatures certify disjoint
+    footprints (never a false negative on conflicts); colliding
+    signatures of truly disjoint sets fall back to the word scan and
+    stay non-conflicting."""
+    from repro.core.plan import signatures_disjoint
+
+    batch, fp = _fp([[0, 64], [129, -1]], [[64, -1], [-1, -1]])
+    # r in {0, 64, 129} -> blocks {0, 1, 2}; writes {64} -> block {1}
+    assert fp.rw_sig == 0b111
+    assert fp.write_sig == 0b10
+    # blocks 0 vs 1: signatures certify disjointness
+    _, a = _fp([[2]], [[2]])
+    _, b = _fp([[66]], [[66]])
+    assert signatures_disjoint(a, b)
+    assert not footprints_conflict(a, b)
+    # records 2 and 3 share block 0: the signature CANNOT certify,
+    # but the word scan still proves the footprints disjoint
+    _, c = _fp([[3]], [[3]])
+    assert not signatures_disjoint(a, c)
+    assert not footprints_conflict(a, c)
+    # a true conflict is never certified disjoint
+    _, d = _fp([[2]], [[-1]])
+    assert not signatures_disjoint(a, d)
+    assert footprints_conflict(a, d)
+    # merged signatures are the OR of the members' signatures
+    fm = merge_footprints(a, c)
+    assert fm.rw_sig == a.rw_sig | c.rw_sig
+    assert fm.write_sig == a.write_sig | c.write_sig
+
+
+def test_footprint_signature_randomized_agreement():
+    """signatures_disjoint => not footprints_conflict on random batches
+    (the fast path may only ever skip work, never flip a verdict)."""
+    from repro.core.plan import signatures_disjoint
+
+    rng = np.random.default_rng(42)
+    fps = []
+    for _ in range(24):
+        reads = rng.integers(-1, 130, (4, 3))
+        writes = np.where(rng.random((4, 3)) < 0.5, reads, -1)
+        fps.append(_fp(reads, writes)[1])
+    for a in fps:
+        for b in fps:
+            slow = bool(np.any(a.write_bits & b.rw_bits)
+                        or np.any(b.write_bits & a.rw_bits))
+            assert footprints_conflict(a, b) == slow
+            if signatures_disjoint(a, b):
+                assert not slow
+
+
 def test_merge_batches_preserves_order_and_timestamps():
     """cc_plan over a merged epoch assigns every txn the same global
     begin/end ts as the two per-batch plans at consecutive ts bases —
