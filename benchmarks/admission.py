@@ -58,8 +58,12 @@ from benchmarks.common import RESULTS_DIR, write_csv
 from repro.core.engine import BohmEngine
 from repro.core.txn import make_batch
 from repro.core.workloads import make_ycsb
-from repro.obs import PhaseTracer, validate_chrome_trace
+from repro.obs import (FlightRecorder, PhaseTracer, stitch_chrome_trace,
+                       validate_chrome_trace)
 from repro.service import TxnService
+from repro.service.txn_service import LATENCY_CLASSES
+
+_CLASS_NAMES = {rank: name for name, rank in LATENCY_CLASSES.items()}
 
 N_RECORDS = 8192
 BATCH = 64
@@ -333,7 +337,72 @@ def trace_stream(kind: str = "mixed") -> None:
           f"{counts['instants']} instants)")
 
 
-def run(quick: bool = False, trace: bool = False) -> list:
+def flight_stream(kind: str = "mixed") -> None:
+    """One flight-recorded pass over the stream (separate from the timed
+    cells — the stitched export also enables the phase tracer, whose
+    span fences would distort timing): every ticket is waited
+    individually so lifecycle records complete at retrieval, then
+
+      * ``results/admission_flight_trace.json`` — the PhaseTracer spans
+        with one Chrome nestable-async LANE per ticket (cat="flight",
+        id=ticket) stitched in on a shared clock, validated including
+        the async b/n/e invariants;
+      * ``results/admission_flight.json`` — per-ticket latency breakdown
+        twin (queue / formation / exec / commit_defer, summing to
+        end-to-end);
+      * ``results/admission_flight_blocking.json`` — the top-K blocking
+        records heatmap with per-kind attribution counts."""
+    rng = np.random.default_rng(47)
+    wl = make_ycsb(payload_words=2)
+    tracer = PhaseTracer(enabled=True)
+    recorder = FlightRecorder(enabled=True)
+    eng = BohmEngine(N_RECORDS, wl, ring_slots=RING_SLOTS, tracer=tracer)
+    svc = TxnService(eng, **OOO_KW, flight=recorder)
+    tickets = svc.submit_many(_stream(rng, kind))
+    tickets.append(svc.submit(
+        _span_batch(rng, 0, HOT_RANGE, ops=INTER_OPS, t=INTER_T),
+        latency_class="interactive"))
+    for t in tickets:
+        svc.wait(t)
+    svc.drain()
+
+    trace = stitch_chrome_trace(tracer, recorder)
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / "admission_flight_trace.json"
+    path.write_text(json.dumps(trace, indent=1))
+    counts = validate_chrome_trace(json.loads(path.read_text()))
+    if counts["async_lanes"] != len(tickets):
+        raise AssertionError(
+            f"expected {len(tickets)} ticket lanes, exported "
+            f"{counts['async_lanes']}")
+
+    rows = []
+    for f in recorder.records():
+        bd = f.breakdown()
+        rows.append({
+            "ticket": f.ticket,
+            "class": _CLASS_NAMES.get(f.latency_class, f.latency_class),
+            "epoch": f.epoch, "epoch_batches": f.epoch_batches,
+            "chain_depth": f.chain_depth, "hops": f.hops,
+            "blocked_events": len(f.blocked),
+            **{f"{k}_ms": round(v * 1e3, 4) for k, v in bd.items()},
+        })
+    write_csv("admission_flight", rows, print_rows=False)
+    heat = [{"record": rec, "blocks": n}
+            for rec, n in recorder.blocking_top(16)]
+    for kind_, n in sorted(recorder.block_kinds.items()):
+        heat.append({"record": f"kind:{kind_}", "blocks": n})
+    write_csv("admission_flight_blocking", heat, print_rows=False)
+    q = recorder.class_quantiles()
+    print(f"flight trace: {path} ({counts['async_lanes']} ticket lanes, "
+          f"{counts['async_spans']} async spans, {counts['spans']} spans)")
+    for rank, row in q.items():
+        print(f"  class {rank}: p50={row['p50'] * 1e3:.2f}ms "
+              f"p99={row['p99'] * 1e3:.2f}ms n={row['count']}")
+
+
+def run(quick: bool = False, trace: bool = False,
+        flight: bool = False) -> list:
     rng = np.random.default_rng(47)
     n_passes = 3 if quick else 5
     rows = []
@@ -344,8 +413,11 @@ def run(quick: bool = False, trace: bool = False) -> list:
     write_csv("admission_latency", lat_rows)
     if trace:
         trace_stream()
+    if flight:
+        flight_stream()
     return rows + lat_rows
 
 
 if __name__ == "__main__":
-    run(quick="--quick" in sys.argv, trace="--trace" in sys.argv)
+    run(quick="--quick" in sys.argv, trace="--trace" in sys.argv,
+        flight="--flight" in sys.argv)

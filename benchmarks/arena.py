@@ -100,6 +100,12 @@ def run(quick: bool = False, iters: int = 2, seed: int = 0,
     all_rows = rows + grows
     write_csv("arena", all_rows, print_rows=False)
 
+    cert = registry.view("arena/")
+    if cert.get("certify_calls"):
+        print(f"\ncertify cost: {cert['certify_calls']} calls / "
+              f"{cert['certify_txns']} txns in "
+              f"{cert['certify_wall_us'] / 1e3:.1f} ms "
+              "(registry view arena/)")
     print("\n" + markdown_pivot(rows))
     check_headline(rows)
     check_gauntlet(grows)

@@ -5,8 +5,9 @@ shared ``MetricsRegistry``, then writes
 
   results/obs_trace.json     Chrome ``trace_event`` JSON of the run's
                              plan/exec/commit spans, admission-decision
-                             instants and gc/reassign spans — load it in
-                             Perfetto or chrome://tracing;
+                             instants, gc/reassign spans AND the flight
+                             recorder's per-ticket async lifecycle lanes
+                             — load it in Perfetto or chrome://tracing;
   results/obs_health.json    {"meta", "health", "counters", "phases"}:
                              the post-run MVCC health gauges, the full
                              registry snapshot, and per-phase wall-time
@@ -29,7 +30,8 @@ import numpy as np
 from benchmarks.common import RESULTS_DIR
 from repro.core.engine import BohmEngine
 from repro.core.txn import Workload, make_batch
-from repro.obs import PhaseTracer, run_metadata, validate_chrome_trace
+from repro.obs import (FlightRecorder, PhaseTracer, run_metadata,
+                       stitch_chrome_trace, validate_chrome_trace)
 from repro.service import TxnService
 
 T, OPS, R = 64, 4, 256
@@ -69,10 +71,12 @@ def _batch(rng, part=None, ops=OPS, t=T):
 
 def run(n_batches: int, spill: bool) -> dict:
     tracer = PhaseTracer(enabled=True, anomaly_threshold=3.0)
+    recorder = FlightRecorder(enabled=True)
     eng = BohmEngine(R, _workload(), ring_slots=8,
                      spill_slots=64 if spill else 0,
                      tracer=tracer)
-    svc = TxnService(eng, max_inflight=2, admission_window=4)
+    svc = TxnService(eng, max_inflight=2, admission_window=4,
+                     flight=recorder)
     rng = np.random.default_rng(0)
     tickets = svc.submit_many([_batch(rng) for _ in range(n_batches)])
     # deterministic scheduler-decision tail: two same-partition bulk
@@ -106,7 +110,9 @@ def run(n_batches: int, spill: bool) -> dict:
 
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     trace_path = RESULTS_DIR / "obs_trace.json"
-    tracer.export(trace_path)
+    # one Perfetto file: sync phase spans + per-ticket async flight lanes
+    with open(trace_path, "w") as f:
+        json.dump(stitch_chrome_trace(tracer, recorder), f, indent=1)
     health_path = RESULTS_DIR / "obs_health.json"
     with open(health_path, "w") as f:
         json.dump({"meta": run_metadata(), "health": health,
@@ -128,9 +134,24 @@ def report(out: dict) -> None:
     print("| gauge | value |")
     print("|---|---|")
     for k, v in out["health"].items():
-        if isinstance(v, list):
+        if isinstance(v, (list, dict)):
             continue
         print(f"| {k} | {v} |")
+    slo = out["health"].get("flight_slo") or {}
+    if slo:
+        print("\n### Flight SLO (per latency class)\n")
+        print("| class | count | p50 ms | p99 ms | mean ms |")
+        print("|---|---|---|---|---|")
+        for cls, g in sorted(slo.items()):
+            print(f"| {cls} | {g['count']} | {g['p50_ms']} | "
+                  f"{g['p99_ms']} | {g['mean_ms']} |")
+    blocking = out["health"].get("flight_blocking_records") or []
+    if blocking:
+        print("\n### Blocking records (conflict attribution top-K)\n")
+        print("| record | blocks |")
+        print("|---|---|")
+        for rec, n_ in blocking:
+            print(f"| {rec} | {n_} |")
     print("\n### Counters\n")
     print("| counter | value |")
     print("|---|---|")
@@ -167,6 +188,7 @@ def main():
         missing = {"admission/hop", "admission/chain_depth",
                    "admission/class_promote"} - names
         assert not missing, f"scheduler instants missing: {missing}"
+        assert counts["async_lanes"] > 0, "no flight-recorder async lanes"
         print(f"trace valid: {counts}")
 
 

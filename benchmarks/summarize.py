@@ -49,6 +49,17 @@ BENCH_TABLES = {
               ["config", "phys_slots", "phys_kwords", "found_rate",
                "found_vs_budget", "txn_s", "txn_s_vs_budget",
                "pages_mapped", "pages_free", "alloc_failed"]),
+    "admission_flight": ("admission flight — per-ticket latency "
+                         "breakdown (queue/formation/exec/commit_defer "
+                         "sum to end-to-end)",
+                         ["ticket", "class", "epoch", "epoch_batches",
+                          "chain_depth", "hops", "blocked_events",
+                          "queue_ms", "formation_ms", "exec_ms",
+                          "commit_defer_ms", "total_ms"]),
+    "admission_flight_blocking": ("admission flight — blocking-records "
+                                  "heatmap (conflict attribution, "
+                                  "top-K witnesses + per-kind counts)",
+                                  ["record", "blocks"]),
     "arena": ("arena — cross-protocol matrix + anomaly gauntlet "
               "(committed txn/s, MVSG verdicts)",
               ["cell", "protocol", "txn_s", "abort_rate", "verdict",
@@ -81,11 +92,38 @@ def bench_meta(name: str):
     return data.get("meta") if isinstance(data, dict) else None
 
 
+def _latency_rows_from_flight():
+    """Fallback for the ``admission_latency`` table: a run that only
+    produced the flight twin (e.g. ``--quick --flight`` without the
+    latency cells) still gets its per-class quantiles, computed from the
+    per-ticket end-to-end breakdowns."""
+    flight = bench_rows("admission_flight")
+    if flight is None:
+        return None
+    by_class = {}
+    for r in flight:
+        if "total_ms" in r:
+            by_class.setdefault(r.get("class", "?"), []).append(
+                float(r["total_ms"]))
+    rows = []
+    for cls, ms in sorted(by_class.items()):
+        arr = np.asarray(ms)
+        rows.append({
+            "mode": "flight", "class": cls, "n_tickets": len(ms),
+            "p50_ms": round(float(np.percentile(arr, 50)), 3),
+            "p99_ms": round(float(np.percentile(arr, 99)), 3),
+            "max_ms": round(float(arr.max()), 3),
+        })
+    return rows or None
+
+
 def print_bench_tables() -> bool:
     """The MVCC benchmark section; returns True when anything printed."""
     printed = False
     for name, (title, columns) in BENCH_TABLES.items():
         rows = bench_rows(name)
+        if rows is None and name == "admission_latency":
+            rows = _latency_rows_from_flight()
         if rows is None:
             continue
         cols = [c for c in (columns or list(rows[0].keys()))

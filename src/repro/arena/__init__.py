@@ -15,7 +15,7 @@ from repro.arena.anomalies import (INIT, Scenario, Verdict, certify,
                                    rmw_control_scenario, run_si_schedule,
                                    tag_batch, write_skew_scenario)
 from repro.arena.matrix import (ArenaCell, arena_matrix, run_cell,
-                                run_gauntlet, run_matrix)
+                                run_gauntlet, run_matrix, stamp_results)
 from repro.arena.protocols import (PROTOCOL_NAMES, BaselineProtocol,
                                    BatchOutput, BohmProtocol,
                                    ProtocolEngine, make_protocol,
@@ -27,7 +27,7 @@ __all__ = [
     "rmw_control_scenario", "run_si_schedule", "tag_batch",
     "write_skew_scenario",
     "ArenaCell", "arena_matrix", "run_cell", "run_gauntlet",
-    "run_matrix",
+    "run_matrix", "stamp_results",
     "PROTOCOL_NAMES", "BaselineProtocol", "BatchOutput", "BohmProtocol",
     "ProtocolEngine", "make_protocol", "make_protocols",
 ]

@@ -47,11 +47,13 @@ from repro.core.txn import TxnBatch, make_batch
 from repro.core.workloads import (gen_scan_batch, gen_smallbank_batch,
                                   gen_ycsb_batch, make_smallbank,
                                   make_ycsb)
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, PhaseTracer, run_metadata
 
 YCSB_OPS = 10
 HOT_SET = 64          # mixed-stream hot-set size
 HOT_FRAC = 0.25       # fraction of mixed-stream txns hitting the hot set
+
+_NULL_TRACER = PhaseTracer()    # shared disabled tracer (no-op spans)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,7 +171,32 @@ def _workload_for(cell: ArenaCell, payload_words: int):
     return make_ycsb(payload_words, ops=YCSB_OPS)
 
 
-def _certify_stream(proto: ProtocolEngine, cell: ArenaCell
+def _certify(batch, read_tags, mask, final, tag_offset=0, *,
+             tracer: Optional[PhaseTracer] = None,
+             registry: Optional[MetricsRegistry] = None,
+             label: str = ""):
+    """``anomalies.certify`` wrapped in the obs plane: an
+    ``arena/certify`` tracer span (host work — no fence) plus registry
+    timing counters under the ``arena/`` view, so gauntlet / matrix
+    certification cost shows up in the obs report next to the engine
+    phases."""
+    tracer = tracer if tracer is not None else _NULL_TRACER
+    t0 = time.perf_counter()
+    with tracer.span("arena/certify", txns=int(batch.size),
+                     cell=label) as sp:
+        v = certify(batch, read_tags, mask, final, tag_offset=tag_offset)
+        sp.note(serializable=v.serializable, edges=v.n_edges)
+    if registry is not None:
+        registry.inc("arena/certify_calls")
+        registry.inc("arena/certify_txns", int(batch.size))
+        registry.inc("arena/certify_wall_us",
+                     int((time.perf_counter() - t0) * 1e6))
+    return v
+
+
+def _certify_stream(proto: ProtocolEngine, cell: ArenaCell,
+                    tracer: Optional[PhaseTracer] = None,
+                    registry: Optional[MetricsRegistry] = None
                     ) -> Dict[str, object]:
     """Tag-replay the cell's update stream through ``proto``'s twin and
     certify every batch's MVSG (final-state check on the last batch)."""
@@ -185,9 +212,10 @@ def _certify_stream(proto: ProtocolEngine, cell: ArenaCell
             zip(cell.batches, offsets, outs)):
         mask = np.asarray(out.commit_mask)
         committed += int(mask.sum())
-        v = certify(batch, np.asarray(out.read_vals)[:, :, 0], mask,
-                    final if i == len(outs) - 1 else None,
-                    tag_offset=int(off))
+        v = _certify(batch, np.asarray(out.read_vals)[:, :, 0], mask,
+                     final if i == len(outs) - 1 else None,
+                     tag_offset=int(off), tracer=tracer,
+                     registry=registry, label=cell.name)
         if verdict is None or (verdict.serializable
                                and not v.serializable):
             verdict = v
@@ -196,7 +224,10 @@ def _certify_stream(proto: ProtocolEngine, cell: ArenaCell
 
 
 def run_cell(cell: ArenaCell, protos: Dict[str, ProtocolEngine],
-             iters: int = 2, base=None) -> List[Dict[str, object]]:
+             iters: int = 2, base=None,
+             tracer: Optional[PhaseTracer] = None,
+             registry: Optional[MetricsRegistry] = None
+             ) -> List[Dict[str, object]]:
     """One matrix cell across protocols -> one row per protocol.
     ``base`` (optional [R, D]) seeds every protocol's store each stream
     (SmallBank's non-zero opening balances); certification always runs
@@ -221,7 +252,8 @@ def run_cell(cell: ArenaCell, protos: Dict[str, ProtocolEngine],
         # final timed stream's values — one stream's worth of proxies
         proxies = proto.proxy_stats()
 
-        cert = _certify_stream(proto, cell)
+        cert = _certify_stream(proto, cell, tracer=tracer,
+                               registry=registry)
         total = cell.total_txns + sum(s.size for s in cell.scans)
         committed = cert["committed"] + sum(s.size for s in cell.scans)
         aborted = cell.total_txns - cert["committed"]
@@ -246,7 +278,8 @@ def run_matrix(cells: Optional[Iterable[ArenaCell]] = None,
                protocols: Sequence[str] = PROTOCOL_NAMES,
                registry: Optional[MetricsRegistry] = None,
                payload_words: int = 2,
-               progress: Optional[Callable[[str], None]] = None
+               progress: Optional[Callable[[str], None]] = None,
+               tracer: Optional[PhaseTracer] = None
                ) -> List[Dict[str, object]]:
     """All cells x all protocols. Protocol sets are built once per
     tensor-shape group and reset between cells."""
@@ -263,8 +296,19 @@ def run_matrix(cells: Optional[Iterable[ArenaCell]] = None,
                                          names=protocols)
         if progress:
             progress(f"cell {cell.name}: {len(groups[key])} protocols")
-        rows.extend(run_cell(cell, groups[key], iters=iters))
+        rows.extend(run_cell(cell, groups[key], iters=iters,
+                             tracer=tracer, registry=registry))
     return rows
+
+
+def stamp_results(rows: List[Dict[str, object]],
+                  extra: Optional[Dict[str, object]] = None
+                  ) -> Dict[str, object]:
+    """Provenance-wrap a matrix / gauntlet row list:
+    ``{"meta": run_metadata(), "rows": rows}`` — the same twin shape
+    ``benchmarks.common.write_json`` emits, for callers that persist
+    arena results directly."""
+    return {"meta": run_metadata(extra), "rows": rows}
 
 
 # ---------------------------------------------------------------------------
@@ -272,7 +316,8 @@ def run_matrix(cells: Optional[Iterable[ArenaCell]] = None,
 # ---------------------------------------------------------------------------
 def run_gauntlet(scenarios: Optional[Sequence[Scenario]] = None,
                  protocols: Sequence[str] = PROTOCOL_NAMES,
-                 registry: Optional[MetricsRegistry] = None
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[PhaseTracer] = None
                  ) -> List[Dict[str, object]]:
     """Every anomaly scenario through every protocol adapter (on tag
     semantics — scenario meaning is purely structural) plus the
@@ -295,12 +340,15 @@ def run_gauntlet(scenarios: Optional[Sequence[Scenario]] = None,
             proto.reset()
             out = proto.run_batch(tagged)
             final = np.asarray(proto.finish())[:, 0]
-            v = certify(sc.batch, np.asarray(out.read_vals)[:, :, 0],
-                        np.asarray(out.commit_mask), final)
+            v = _certify(sc.batch, np.asarray(out.read_vals)[:, :, 0],
+                         np.asarray(out.commit_mask), final,
+                         tracer=tracer, registry=registry,
+                         label=f"gauntlet:{sc.name}")
             rows.append(_gauntlet_row(sc, name, v))
         final, read_tags, mask = run_si_schedule(
             sc.batch, sc.n_records, sc.si_begin, sc.si_commit)
-        v = certify(sc.batch, read_tags, mask, final)
+        v = _certify(sc.batch, read_tags, mask, final, tracer=tracer,
+                     registry=registry, label=f"gauntlet:{sc.name}")
         rows.append(_gauntlet_row(sc, "si-schedule", v))
     return rows
 

@@ -501,8 +501,13 @@ class BohmEngine:
             ts = ts.ts
         if ts is None:
             ts = self.current_ts()
-        return self._readonly(self.store.versions, batch.read_set,
-                              jnp.asarray(int(ts), jnp.int32))
+        with self.tracer.span("read/resolve", txns=batch.size,
+                              ts=int(ts)) as sp:
+            vals, found, metrics = self._readonly(
+                self.store.versions, batch.read_set,
+                jnp.asarray(int(ts), jnp.int32))
+            sp.fence(vals)
+        return vals, found, metrics
 
     # -- K-ring pressure diagnostics ---------------------------------------
     def record_commit_metrics(self, metrics: Dict[str, jax.Array],

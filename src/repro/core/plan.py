@@ -261,6 +261,26 @@ def footprints_conflict(a: BatchFootprint, b: BatchFootprint) -> bool:
                 or np.any(b.write_bits & a.rw_bits))
 
 
+def conflict_witness(a: BatchFootprint, b: BatchFootprint
+                     ) -> Optional[int]:
+    """A concrete record id proving ``footprints_conflict(a, b)``: the
+    lowest record written by one batch and touched (read or written) by
+    the other. Returns None when the footprints commute.
+
+    This is the flight recorder's conflict-attribution primitive: when
+    the scheduler declines to merge/hop a batch, the witness names WHICH
+    record blocked it — derived from the same packed bitsets the
+    disjointness test already scanned, so attribution costs one extra
+    word scan and only runs on the (rare) conflict path."""
+    for cross in (a.write_bits & b.rw_bits, b.write_bits & a.rw_bits):
+        nz = np.flatnonzero(cross)
+        if nz.size:
+            w = int(nz[0])
+            bit = int(cross[w])
+            return w * 64 + ((bit & -bit).bit_length() - 1)
+    return None
+
+
 def merge_footprints(a: BatchFootprint, b: BatchFootprint) -> BatchFootprint:
     # a block is touched in a|b iff it is touched in a or in b, so
     # merged signatures are the OR of the member signatures — free

@@ -2,36 +2,56 @@
 
 Bohm's design keeps reads bookkeeping-free and writers off contended
 shared state; instrumentation must honor the same contract or it
-perturbs exactly what it measures. Three layers:
+perturbs exactly what it measures. The layers:
 
-``registry``  ``MetricsRegistry``: typed counters / gauges with
-              device-side array accumulation on the hot path (lazy adds
-              folded onto the jitted phases' metric outputs — no host
-              sync, no per-batch Python arithmetic on device values) and
-              ONE host transfer at ``snapshot()``. The engine's and
-              schedulers' legacy stats surfaces are views onto it.
-``trace``     ``PhaseTracer``: bounded-ring span instrumentation around
-              plan/exec/commit, gc_sweep, reassign_k and admission
-              decisions, fenced by ``block_until_ready`` only at span
-              close when tracing is ON (OFF = zero overhead, tested).
-              Exports Chrome ``trace_event`` JSON (Perfetto-loadable);
-              optional ``jax.profiler.TraceAnnotation`` passthrough.
-``health``    derived MVCC gauges computed from store state on demand:
-              watermark lag, pin ages, ring/slab/spill saturation,
-              pressure percentiles — ``BohmEngine.health()`` /
-              ``TxnService.health()``.
+``registry``   ``MetricsRegistry``: typed counters / gauges with
+               device-side array accumulation on the hot path (lazy adds
+               folded onto the jitted phases' metric outputs — no host
+               sync, no per-batch Python arithmetic on device values) and
+               ONE host transfer at ``snapshot()``. The engine's and
+               schedulers' legacy stats surfaces are views onto it.
+``trace``      ``PhaseTracer``: bounded-ring span instrumentation around
+               plan/exec/commit, gc_sweep, reassign_k and admission
+               decisions, fenced by ``block_until_ready`` only at span
+               close when tracing is ON (OFF = zero overhead, tested).
+               Exports Chrome ``trace_event`` JSON (Perfetto-loadable);
+               optional ``jax.profiler.TraceAnnotation`` passthrough.
+``flight``     ``FlightRecorder``: per-ticket lifecycle records through
+               the out-of-order scheduler (submit → dispatch → exec →
+               commit → visible), telescoping latency breakdowns,
+               conflict attribution with footprint witnesses, per-class
+               quantile digests, Chrome async-lane export stitched into
+               the tracer's (OFF = one attribute test per hook).
+``quantiles``  ``LogHistogram``: fixed-bucket log histogram — streaming
+               p50/p99 with bounded relative error, no sample retention.
+``health``     derived MVCC gauges computed from store state on demand:
+               watermark lag, pin ages, ring/slab/spill saturation,
+               pressure percentiles, flight SLO quantiles —
+               ``BohmEngine.health()`` / ``TxnService.health()``.
+``regress``    benchmark trajectory: append-only ``BENCH_<suite>.json``
+               histories at the repo root (``run_metadata()``-stamped)
+               gated by ``EwmaAnomaly`` baselines (see
+               ``benchmarks/bench_history.py``).
 
 ``ewma`` (shared anomaly baselines) and ``meta`` (``run_metadata()``
 provenance stamping for benchmark artifacts) ride along.
 """
 from repro.obs.ewma import Ewma, EwmaAnomaly
+from repro.obs.flight import (NULL_FLIGHT, FlightRecorder, TicketFlight,
+                              stitch_chrome_trace)
 from repro.obs.health import engine_health, service_health
 from repro.obs.meta import git_sha, run_metadata
+from repro.obs.quantiles import LogHistogram
+from repro.obs.regress import (Regression, append_entry, check_history,
+                               direction_for, history_path, load_history)
 from repro.obs.registry import MetricsRegistry, MetricsView
 from repro.obs.trace import (NULL_SPAN, PhaseTracer, validate_chrome_trace)
 
 __all__ = [
-    "Ewma", "EwmaAnomaly", "MetricsRegistry", "MetricsView",
-    "NULL_SPAN", "PhaseTracer", "engine_health", "git_sha",
-    "run_metadata", "service_health", "validate_chrome_trace",
+    "Ewma", "EwmaAnomaly", "FlightRecorder", "LogHistogram",
+    "MetricsRegistry", "MetricsView", "NULL_FLIGHT", "NULL_SPAN",
+    "PhaseTracer", "Regression", "TicketFlight", "append_entry",
+    "check_history", "direction_for", "engine_health", "git_sha",
+    "history_path", "load_history", "run_metadata", "service_health",
+    "stitch_chrome_trace", "validate_chrome_trace",
 ]

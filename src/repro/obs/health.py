@@ -112,4 +112,28 @@ def service_health(service) -> Dict[str, object]:
         "scheduler_class_promotions": service.stats["class_promotions"],
         "scheduler_chain_depth_max": service.stats["chain_depth_max"],
     })
+    flight = getattr(service, "flight", None)
+    if flight is not None and flight.enabled:
+        # lazy import: obs stays import-free of the service layer at
+        # module scope; by the time a TxnService is passed in here the
+        # service module is necessarily loaded
+        from repro.service.txn_service import LATENCY_CLASSES
+        names = {rank: name for name, rank in LATENCY_CLASSES.items()}
+        slo = {}
+        for rank, row in flight.class_quantiles().items():
+            name = names.get(rank, f"class_{rank}")
+            slo[name] = {
+                "p50_ms": round(row["p50"] * 1e3, 4),
+                "p99_ms": round(row["p99"] * 1e3, 4),
+                "mean_ms": round(row["mean"] * 1e3, 4),
+                "count": row["count"],
+            }
+        health.update({
+            "flight_slo": slo,
+            "flight_completed": flight.completed,
+            "flight_inflight": flight.inflight(),
+            "flight_dropped": flight.dropped,
+            "flight_blocking_records": flight.blocking_top(),
+            "flight_block_kinds": dict(flight.block_kinds),
+        })
     return health

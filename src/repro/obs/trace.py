@@ -200,11 +200,15 @@ class PhaseTracer:
                 out.setdefault(name, []).append(t - t0)
         return out
 
-    def to_chrome_trace(self) -> Dict:
+    def to_chrome_trace(self, t0: Optional[float] = None) -> Dict:
         """Chrome ``trace_event`` object-format dict: B/E duration events
         + thread-scoped instants, timestamps in microseconds since the
-        first recorded event."""
-        t0 = self._t0 or 0.0
+        first recorded event. Pass ``t0`` (perf_counter seconds) to pin
+        a shared time origin when stitching with other event sources
+        (``repro.obs.flight.stitch_chrome_trace``) — it must not exceed
+        the first recorded stamp or timestamps would go negative."""
+        if t0 is None:
+            t0 = self._t0 or 0.0
         pid, tid = os.getpid(), 1
         events = []
         depth = 0           # ring overflow drops oldest-first, which can
@@ -236,15 +240,20 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
     """Validate a Chrome ``trace_event`` object-format dict: every event
     carries name/ph/ts/pid/tid, timestamps are monotonic non-decreasing
     in record order, and B/E events match LIFO per (pid, tid) with no
-    unmatched E and no dangling B. Returns summary counts; raises
+    unmatched E and no dangling B. Nestable async events (ph b/n/e —
+    the flight recorder's per-ticket lanes) must additionally carry
+    ``id`` and ``cat``, and b/e match LIFO per (pid, cat, id) with no
+    unmatched e and no dangling b. Returns summary counts; raises
     ``ValueError`` on the first violation (CI gates exported artifacts
     on this)."""
     events = trace.get("traceEvents")
     if not isinstance(events, list):
         raise ValueError("traceEvents missing or not a list")
     stacks: Dict[tuple, List[str]] = {}
+    async_stacks: Dict[tuple, List[str]] = {}
     last_ts = None
-    n_spans = n_instants = 0
+    n_spans = n_instants = n_async = 0
+    async_lanes = set()
     for i, ev in enumerate(events):
         for field in ("name", "ph", "ts", "pid", "tid"):
             if field not in ev:
@@ -267,10 +276,33 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
             n_spans += 1
         elif ph == "i":
             n_instants += 1
+        elif ph in ("b", "n", "e"):
+            for field in ("id", "cat"):
+                if field not in ev:
+                    raise ValueError(
+                        f"event {i}: async '{ph}' missing '{field}'")
+            akey = (ev["pid"], ev["cat"], ev["id"])
+            async_lanes.add(akey)
+            if ph == "b":
+                async_stacks.setdefault(akey, []).append(ev["name"])
+            elif ph == "e":
+                stack = async_stacks.get(akey)
+                if not stack:
+                    raise ValueError(f"event {i}: 'e' without open 'b' "
+                                     f"in lane {akey}")
+                top = stack.pop()
+                if top != ev["name"]:
+                    raise ValueError(
+                        f"event {i}: 'e' '{ev['name']}' closes '{top}'")
+                n_async += 1
         else:
             raise ValueError(f"event {i}: unknown ph '{ph}'")
     dangling = sum(len(s) for s in stacks.values())
     if dangling:
         raise ValueError(f"{dangling} B events never closed")
+    dangling = sum(len(s) for s in async_stacks.values())
+    if dangling:
+        raise ValueError(f"{dangling} async 'b' events never closed")
     return {"spans": n_spans, "instants": n_instants,
+            "async_spans": n_async, "async_lanes": len(async_lanes),
             "events": len(events)}

@@ -80,10 +80,12 @@ import numpy as np
 
 from repro.core.engine import BohmEngine, SnapshotHandle
 from repro.core.plan import (MAX_BATCH_TXNS, BatchFootprint,
-                             batch_footprint, footprints_conflict,
-                             merge_batches, merge_footprints)
+                             batch_footprint, conflict_witness,
+                             footprints_conflict, merge_batches,
+                             merge_footprints)
 from repro.core.txn import TxnBatch
 from repro.obs import service_health
+from repro.obs.flight import NULL_FLIGHT, FlightRecorder
 
 # latency classes, lower scans first ("interactive" jumps "bulk")
 LATENCY_CLASSES = {"interactive": 0, "bulk": 1}
@@ -137,7 +139,8 @@ class TxnService:
     def __init__(self, engine: BohmEngine, max_inflight: int = 2,
                  pipelined: bool = True, admission_window: int = 1,
                  reorder: bool = True, max_inflight_execs: int = 2,
-                 max_hops: int = 4):
+                 max_hops: int = 4,
+                 flight: Optional[FlightRecorder] = None):
         if max_inflight < 1:
             raise ValueError("max_inflight must be >= 1")
         if admission_window < 1:
@@ -170,6 +173,13 @@ class TxnService:
         # but visible to snapshot()/obs_report alongside engine counters
         self.metrics = engine.metrics
         self.tracer = engine.tracer
+        # per-ticket lifecycle recorder (repro.obs.flight). Default is
+        # the shared disabled recorder, so every hook below reduces to
+        # one attribute test — zero events, zero fences, byte-identical
+        # results (property-tested next to the tracer's contract).
+        self.flight = flight if flight is not None else NULL_FLIGHT
+        if self.flight.enabled:
+            self.flight.bind_registry(self.metrics)
         self.stats = engine.metrics.view("service/")
         for key in ("submitted", "planned_ahead_max",
                     "backpressure_joins",
@@ -231,6 +241,8 @@ class TxnService:
         self._admission.append(_Admitted(ticket, batch, fp, rank,
                                          t_admit=time.monotonic()))
         self.stats["submitted"] += 1
+        if self.flight.enabled:
+            self.flight.on_submit(ticket, rank, batch.size)
         return ticket
 
     def poll(self, ticket: int) -> Optional[BatchResult]:
@@ -245,6 +257,8 @@ class TxnService:
         if not _is_ready(res.read_vals):
             return None
         self._note_joined(ticket)
+        if self.flight.enabled:
+            self.flight.on_visible(ticket)
         del self._results[ticket]
         return res
 
@@ -255,6 +269,8 @@ class TxnService:
         res = self._results.pop(ticket)
         jax.block_until_ready(res.read_vals)
         self._note_joined(ticket)
+        if self.flight.enabled:
+            self.flight.on_visible(ticket)
         return res
 
     def drain(self) -> None:
@@ -263,6 +279,11 @@ class TxnService:
         BEFORE the drain if its read values are wanted."""
         self._pump(flush=True)
         jax.block_until_ready(self.engine.store.base)
+        if self.flight.enabled:
+            # the store join above realised every outstanding commit, so
+            # discarded results still complete their lifecycle records
+            for ticket in self._results:
+                self.flight.on_visible(ticket)
         self._inflight.clear()
         self._results.clear()
 
@@ -364,6 +385,10 @@ class TxnService:
             self._planned.append(_Planned(tickets, sizes, batch, fp,
                                           plan, ts_base, wm, pins))
             self.dispatch_log.append(list(tickets))
+            if self.flight.enabled:
+                self.flight.on_dispatch(
+                    tickets, epoch=len(self.dispatch_log) - 1,
+                    epoch_txns=batch.size, epoch_batches=len(tickets))
             self.stats["planned_ahead_max"] = max(
                 self.stats["planned_ahead_max"], len(self._planned))
             progressed = True
@@ -388,6 +413,7 @@ class TxnService:
         head = self._admission.popleft()
         tickets, sizes = [head.ticket], [head.batch.size]
         batch, fp = head.batch, head.footprint
+        member_fps = [(head.ticket, head.footprint)]
         scanned = 1
         while self._admission and scanned < self.admission_window:
             if not self._can_merge(batch, fp, self._admission[0]):
@@ -399,10 +425,20 @@ class TxnService:
                         epoch_records=_popcount(fp.rw_bits),
                         next_records=(_popcount(nfp.rw_bits)
                                       if nfp is not None else -1))
+                if self.flight.enabled:
+                    nxt = self._admission[0]
+                    if nxt.footprint is not None:
+                        for tk, mfp in member_fps:   # attribute the stop
+                            w = conflict_witness(nxt.footprint, mfp)
+                            if w is not None:
+                                self.flight.on_blocked(
+                                    nxt.ticket, "epoch-conflict", tk, w)
+                                break
                 break
             nxt = self._admission.popleft()
             batch = merge_batches(batch, nxt.batch)
             fp = merge_footprints(fp, nxt.footprint)
+            member_fps.append((nxt.ticket, nxt.footprint))
             tickets.append(nxt.ticket)
             sizes.append(nxt.batch.size)
             self.stats["merged_batches"] += 1
@@ -477,11 +513,19 @@ class TxnService:
                 epoch_size += a.batch.size
                 changed = True
         sel.sort()   # concatenate members in submission order
+        if self.flight.enabled and sel:
+            # attribution BEFORE the hop bump, so recorded reasons match
+            # the hop/saturation state the selection loop actually saw
+            self._attribute_blocks(window, fps, sel, sel_set)
         # hop + class-promotion accounting for everything jumped over
         jumped = [j for j in range(max(sel))
                   if j not in sel_set] if sel else []
         for j in jumped:
             window[j].hops += 1
+            if self.flight.enabled:
+                self.flight.on_hop(window[j].ticket, window[j].hops)
+                if window[j].hops >= self.max_hops:
+                    self.flight.on_saturate(window[j].ticket)
         if jumped:
             self.stats["hopped_batches"] += len(jumped)
             if self.tracer.enabled:
@@ -519,6 +563,45 @@ class TxnService:
         self._admission = deque(
             [adm[i] for i in range(len(adm)) if i not in sel_set])
         return tickets, sizes, batch, fp
+
+    def _attribute_blocks(self, window, fps, sel, sel_set) -> None:
+        """Flight-recorder conflict attribution (enabled-only path): for
+        every window member NOT selected into the epoch, identify the
+        blocker the selection checks tripped on — a selected member
+        whose footprint conflicts (the candidate was hopped over:
+        ``epoch-conflict``), an earlier unselected batch it cannot
+        legally hop (``hop-blocked``), or a hop-saturated barrier
+        (``hop-saturated``) — plus a concrete witness record from
+        ``plan.conflict_witness``. One event per member per formation
+        round, mirroring the selection checks in their evaluation
+        order."""
+        fl = self.flight
+        for i in range(len(window)):
+            if i in sel_set:
+                continue
+            a = window[i]
+            if a.footprint is None:
+                continue
+            for s in sel:                      # merge condition first
+                w = conflict_witness(a.footprint, fps[s])
+                if w is not None:
+                    fl.on_blocked(a.ticket, "epoch-conflict",
+                                  window[s].ticket, w)
+                    break
+            else:                              # then the hop condition
+                for j in range(i):
+                    if j in sel_set:
+                        continue
+                    if window[j].hops >= self.max_hops:
+                        fl.on_blocked(
+                            a.ticket, "hop-saturated", window[j].ticket,
+                            conflict_witness(a.footprint, fps[j]))
+                        break
+                    w = conflict_witness(a.footprint, fps[j])
+                    if w is not None:
+                        fl.on_blocked(a.ticket, "hop-blocked",
+                                      window[j].ticket, w)
+                        break
 
     @staticmethod
     def _widths_match(a: TxnBatch, b: TxnBatch) -> bool:
@@ -558,7 +641,8 @@ class TxnService:
                and not footprints_conflict(chain_fp,
                                            self._planned[0].footprint)):
             e = self._planned.popleft()
-            chain.append((e, self._exec_epoch(e, overlapped=True)))
+            chain.append((e, self._exec_epoch(e, overlapped=True,
+                                              chain_depth=len(chain) + 1)))
             chain_fp = merge_footprints(chain_fp, e.footprint)
             self.stats["overlapped_execs"] += 1
             if self.tracer.enabled:
@@ -578,11 +662,14 @@ class TxnService:
             self._commit_epoch(e, w, r, m)
         return True
 
-    def _exec_epoch(self, e: _Planned, overlapped: bool = False):
+    def _exec_epoch(self, e: _Planned, overlapped: bool = False,
+                    chain_depth: int = 1):
         kwargs = {"overlapped": True} if overlapped else {}
         with self.tracer.span("exec_phase", txns=e.size, **kwargs) as sp:
             w, r, m = self.engine._exec(e.plan, e.batch, self.engine.store)
             sp.fence(r)
+        if self.flight.enabled:
+            self.flight.on_exec(e.tickets, chain_depth)
         return w, r, m
 
     def _commit_epoch(self, e: _Planned, w_data, read_vals,
@@ -601,6 +688,8 @@ class TxnService:
                 jnp.asarray(e.watermark, jnp.int32), window, e.pin_ts)
             eng.store = store
             sp.fence(store.base)
+        if self.flight.enabled:
+            self.flight.on_commit(e.tickets)
         metrics = dict(exec_metrics, **ring_metrics)
         eng.record_commit_metrics(metrics, n_txns=e.size)
         off = 0

@@ -59,7 +59,7 @@ class ServeEngine:
                  page_size: int = 16, num_pages: int = 512,
                  max_pages_per_seq: int = 64, temperature: float = 0.0,
                  kv_dtype=jnp.bfloat16, max_rids: int = 1024,
-                 state_shards: int = 2):
+                 state_shards: int = 2, registry=None, tracer=None):
         assert cfg.attention == "full" and not cfg.enc_dec and not cfg.hybrid
         self.cfg = cfg
         self.params = params
@@ -73,9 +73,15 @@ class ServeEngine:
         # MVCC request-state store: one progress record per rid, committed
         # through the full CC->exec->commit pipeline each serving step and
         # read back via batched snapshot reads over the sharded ring.
+        # registry/tracer flow into the state engine, so lookup /
+        # progress_view snapshot reads show up as "read/resolve" spans
+        # next to the store's plan/exec/commit phases.
         self.max_rids = max_rids
         self.state = BohmEngine(max_rids, make_state_workload(),
-                                ring_slots=4, n_shards=state_shards)
+                                ring_slots=4, n_shards=state_shards,
+                                registry=registry, tracer=tracer)
+        self.tracer = self.state.tracer
+        self.metrics = self.state.metrics
         self._state_dirty: Dict[int, List[int]] = {}
         self._decode = jax.jit(functools.partial(_paged_decode_step, cfg=cfg))
         self._prefill = jax.jit(functools.partial(_paged_prefill, cfg=cfg),

@@ -151,7 +151,8 @@ def test_tracer_span_export_and_validation(tmp_path):
         sp.note(result=7)
     trace = tr.to_chrome_trace()
     counts = validate_chrome_trace(trace)
-    assert counts == {"spans": 2, "instants": 1, "events": 5}
+    assert counts == {"spans": 2, "instants": 1, "events": 5,
+                      "async_spans": 0, "async_lanes": 0}
     ev = trace["traceEvents"]
     names = [(e["ph"], e["name"]) for e in ev]
     assert names == [("B", "outer"), ("B", "inner"), ("E", "inner"),
