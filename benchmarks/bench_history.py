@@ -95,7 +95,9 @@ def _extract_storage(rows: List[Dict]) -> Dict[str, float]:
         cfg = r.get("config")
         if not cfg:
             continue
-        for key in ("found_rate", "txn_s"):
+        # phys_kwords only exists in the paged twin (physical footprint
+        # is ITS headline claim); spill rows simply skip it
+        for key in ("found_rate", "txn_s", "phys_kwords"):
             v = _num(r, key)
             if v is not None:
                 out[f"{cfg}_{key}"] = v

@@ -51,10 +51,11 @@ from repro.core.execute import (Store, commit, execute_plan, init_store,
 from repro.core.plan import MAX_BATCH_TXNS, Plan, cc_plan
 from repro.core.txn import TxnBatch, Workload
 from repro.obs import MetricsRegistry, PhaseTracer, engine_health
+from repro.obs.lifecycle import NULL_AUDIT, LifecycleAuditor
 from repro.store import (INF_TS, decay_pressure, from_global,
-                         gather_windows_sharded, gc_sharded, reassign_k,
-                         reassign_stats, resolve_sharded, store_occupancy,
-                         to_global)
+                         gather_windows_sharded, gc_sharded,
+                         gc_sharded_audited, reassign_k, reassign_stats,
+                         resolve_sharded, store_occupancy, to_global)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,7 +82,8 @@ class BohmEngine:
                  pressure_decay: Optional[float] = None,
                  k_quantum: Optional[int] = None,
                  registry: Optional[MetricsRegistry] = None,
-                 tracer: Optional[PhaseTracer] = None):
+                 tracer: Optional[PhaseTracer] = None,
+                 auditor: Optional[LifecycleAuditor] = None):
         """``spill_slots`` > 0 (default 8) attaches a per-shard spill pool
         of ``spill_buckets`` x ``spill_slots`` slots (default: one bucket
         per 4 local records) — live K-ring evictions land there instead
@@ -123,7 +125,14 @@ class BohmEngine:
         ``repro.obs.PhaseTracer``) wraps plan/exec/commit, ``gc_sweep``
         and ``reassign_k`` in wall-clock spans, fenced by
         ``block_until_ready`` only at span close when tracing is enabled
-        — disabled tracing (the default) adds no host syncs."""
+        — disabled tracing (the default) adds no host syncs. ``auditor``
+        (optional ``repro.obs.LifecycleAuditor``) turns on the version-
+        lifecycle audit: the commit jit emits fixed-shape ``audit_*``
+        transition arrays, ``gc_sweep`` runs the audited sweep (delay
+        distribution + pin certification) and harvests the bounded host
+        audit ring — still zero fences on or off (the audit arrays ride
+        the existing dispatches; the one ``jax.device_get`` happens at
+        sweep/snapshot boundaries)."""
         if num_records > (1 << 20):
             raise ValueError("composite uint32 keys require R <= 2^20")
         self.num_records = num_records
@@ -188,6 +197,7 @@ class BohmEngine:
             else MetricsRegistry()
         self.tracer = tracer if tracer is not None \
             else PhaseTracer(enabled=False)
+        self.auditor = auditor if auditor is not None else NULL_AUDIT
         self._declare_metrics()
         # adaptive-K hysteresis: a record donates capacity only after
         # sitting idle across two consecutive policy passes
@@ -204,8 +214,11 @@ class BohmEngine:
         self._exec = jax.jit(functools.partial(
             exec_phase, workload=workload))
         self._commit = jax.jit(functools.partial(
-            commit_phase, mesh=mesh, cc_axis=cc_axis))
+            commit_phase, mesh=mesh, cc_axis=cc_axis,
+            with_audit=self.auditor.enabled))
         self._gc = jax.jit(gc_sharded)
+        self._gc_audit = jax.jit(functools.partial(
+            gc_sharded_audited, event_cap=self.auditor.gc_event_cap))
         self._gather = jax.jit(gather_windows_sharded)
         self._readonly = jax.jit(functools.partial(
             _readonly_resolve, mesh=mesh, cc_axis=cc_axis,
@@ -230,6 +243,9 @@ class BohmEngine:
             m.declare(f"engine/{name}", scalar)
         m.set("engine/commits", 0)
         m.set("engine/txns_committed", 0)
+        if self.auditor.enabled:
+            # lifecycle counters share the store's lifecycle too
+            self.auditor.bind_engine(self)
 
     # -- update path -------------------------------------------------------
     def run_batch(self, batch: TxnBatch
@@ -279,6 +295,8 @@ class BohmEngine:
         return metrics
 
     def snapshot(self) -> jax.Array:
+        if self.auditor.enabled:
+            self.auditor.harvest()
         return self.store.base
 
     def reset_store(self, base: jax.Array,
@@ -370,7 +388,12 @@ class BohmEngine:
         wm_host = self.watermark()
         with self.tracer.span("gc_sweep", watermark=wm_host) as sp:
             wm = jnp.asarray(wm_host, jnp.int32)
-            versions, evicted = self._gc(self.store.versions, wm)
+            if self.auditor.enabled:
+                versions, evicted, gc_audit = self._gc_audit(
+                    self.store.versions, wm, self.pin_array())
+                self.auditor.on_gc(gc_audit, wm_host)
+            else:
+                versions, evicted = self._gc(self.store.versions, wm)
             # the policy runs only when commits landed since the last
             # sweep: a sweep is pure reclamation, so with nothing new
             # committed the pressure/occupancy inputs are unchanged and
@@ -384,6 +407,10 @@ class BohmEngine:
             sp.note(reclaimed=evicted)
         self.metrics.inc("engine/gc_sweeps")
         self.metrics.inc("engine/gc_reclaimed", evicted)
+        # sweep boundary = audit-harvest boundary (one device_get; the
+        # hot path between sweeps stays fence-free)
+        if self.auditor.enabled:
+            self.auditor.harvest()
         return evicted
 
     def _run_policy(self, versions):
@@ -530,6 +557,9 @@ class BohmEngine:
         m.inc("engine/commits")
         m.inc("engine/txns_committed", n_txns)
         self._commits_since_sweep += 1
+        # lifecycle audit: fold state counters, stash the lazy audit_*
+        # arrays (popped from ``metrics`` so result fan-out stays clean)
+        self.auditor.on_commit(metrics)
 
     def overflow_by_record(self) -> jax.Array:
         """[R] cumulative count of LIVE version evictions per record —
@@ -635,6 +665,16 @@ class BohmEngine:
         synchronises."""
         return engine_health(self)
 
+    def inspect_record(self, record: int):
+        """Time-travel inspector for one record (requires an enabled
+        ``auditor``): resident versions across ring/slab/spill merged
+        with the harvested transition events — see
+        ``repro.obs.LifecycleAuditor.inspect_record``."""
+        if not self.auditor.enabled:
+            raise RuntimeError(
+                "inspect_record requires BohmEngine(auditor=...)")
+        return self.auditor.inspect_record(record)
+
 
 def _bucket_histogram(counts: jax.Array, edges: List[int]
                       ) -> List[Tuple[str, int]]:
@@ -688,7 +728,7 @@ def commit_phase(plan: Plan, batch: TxnBatch, store: Store,
                  watermark: Optional[jax.Array] = None,
                  ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
                  pin_ts: Optional[jax.Array] = None,
-                 *, mesh, cc_axis: str
+                 *, mesh, cc_axis: str, with_audit: bool = False
                  ) -> Tuple[Store, Dict[str, jax.Array]]:
     """Watermark-driven sharded commit of an executed epoch. ``ts_window``
     (default: the plan's own [ts_base, ts_base + T) span) makes the
@@ -698,7 +738,7 @@ def commit_phase(plan: Plan, batch: TxnBatch, store: Store,
     the pin-precise live/dead eviction split and spill admission."""
     return commit(plan, batch, store, w_data, watermark,
                   mesh=mesh, cc_axis=cc_axis, ts_window=ts_window,
-                  pin_ts=pin_ts)
+                  pin_ts=pin_ts, with_audit=with_audit)
 
 
 def exec_commit_phase(plan: Plan, batch: TxnBatch, store: Store,

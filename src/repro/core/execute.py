@@ -153,7 +153,8 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
            watermark: Optional[jax.Array] = None, mesh=None,
            cc_axis: str = "cc",
            ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
-           pin_ts: Optional[jax.Array] = None
+           pin_ts: Optional[jax.Array] = None,
+           with_audit: bool = False
            ) -> Tuple[Store, Dict[str, jax.Array]]:
     """Batch barrier: fold each record's batch-final version into the head
     cache AND commit every batch version into the persistent (sharded)
@@ -195,7 +196,8 @@ def commit(plan: Plan, batch: TxnBatch, store: Store, w_data: jax.Array,
     versions, ring_metrics = commit_sharded(
         store.versions, plan.w_rec, plan.w_key, plan.w_valid,
         plan.w_begin_ts, plan.w_end_ts, w_data, watermark,
-        mesh=mesh, axis=cc_axis, ts_window=ts_window, pin_ts=pin_ts)
+        mesh=mesh, axis=cc_axis, ts_window=ts_window, pin_ts=pin_ts,
+        with_audit=with_audit)
     return Store(base=base, base_ts=base_ts,
                  ts_counter=jnp.asarray(ts_window[1], jnp.int32),
                  versions=versions), ring_metrics

@@ -14,9 +14,26 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Dict, List, Optional, Tuple
 
-from repro.obs.ewma import EwmaAnomaly
+from repro.obs.ewma import EwmaAnomaly as _EwmaAnomaly
+
+
+def __getattr__(name: str):
+    """Deprecation shim: the EWMA estimators moved to
+    ``repro.obs.ewma`` — importing them from here keeps working (one
+    release) but warns. ``StragglerDetector`` stays; it is the ft-layer
+    wrapper, not the estimator."""
+    if name in ("Ewma", "EwmaAnomaly"):
+        warnings.warn(
+            f"repro.ft.monitor.{name} is deprecated; import it from "
+            "repro.obs.ewma",
+            DeprecationWarning, stacklevel=2)
+        from repro.obs import ewma
+        return getattr(ewma, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 class HeartbeatMonitor:
@@ -45,7 +62,7 @@ class StragglerDetector:
     def __init__(self, alpha: float = 0.1, threshold: float = 2.0):
         self.alpha = alpha
         self.threshold = threshold
-        self._anomaly = EwmaAnomaly(alpha=alpha, threshold=threshold)
+        self._anomaly = _EwmaAnomaly(alpha=alpha, threshold=threshold)
         self.flagged: List[int] = []
 
     @property

@@ -27,7 +27,18 @@ perturbs exactly what it measures. The layers:
 ``health``     derived MVCC gauges computed from store state on demand:
                watermark lag, pin ages, ring/slab/spill saturation,
                pressure percentiles, flight SLO quantiles —
-               ``BohmEngine.health()`` / ``TxnService.health()``.
+               ``BohmEngine.health()`` / ``TxnService.health()`` /
+               ``BohmScheduler.health()``.
+``lifecycle``  ``LifecycleAuditor``: every version transition (committed,
+               overwritten, spilled, page-dropped, gc-reclaimed) into
+               per-state device counters + a bounded host audit ring,
+               harvested only at sweep/snapshot boundaries (zero fences
+               on or off); the ``inspect_record`` time-travel inspector
+               and the GC delay/pin-certification audit.
+``monitor``    ``HealthMonitor``: fixed-cadence ``health()`` sampling
+               into bounded ring-buffer series, EWMA anomaly alerts
+               (warn/crit JSONL event log), Chrome counter-track export
+               stitched into the phase/flight trace.
 ``regress``    benchmark trajectory: append-only ``BENCH_<suite>.json``
                histories at the repo root (``run_metadata()``-stamped)
                gated by ``EwmaAnomaly`` baselines (see
@@ -39,8 +50,12 @@ provenance stamping for benchmark artifacts) ride along.
 from repro.obs.ewma import Ewma, EwmaAnomaly
 from repro.obs.flight import (NULL_FLIGHT, FlightRecorder, TicketFlight,
                               stitch_chrome_trace)
-from repro.obs.health import engine_health, service_health
+from repro.obs.health import (engine_health, scheduler_health,
+                              service_health)
+from repro.obs.lifecycle import (NULL_AUDIT, AuditEvent, LifecycleAuditor,
+                                 RecordTimeline)
 from repro.obs.meta import git_sha, run_metadata
+from repro.obs.monitor import NULL_MONITOR, HealthMonitor
 from repro.obs.quantiles import LogHistogram
 from repro.obs.regress import (Regression, append_entry, check_history,
                                direction_for, history_path, load_history)
@@ -48,10 +63,12 @@ from repro.obs.registry import MetricsRegistry, MetricsView
 from repro.obs.trace import (NULL_SPAN, PhaseTracer, validate_chrome_trace)
 
 __all__ = [
-    "Ewma", "EwmaAnomaly", "FlightRecorder", "LogHistogram",
-    "MetricsRegistry", "MetricsView", "NULL_FLIGHT", "NULL_SPAN",
-    "PhaseTracer", "Regression", "TicketFlight", "append_entry",
-    "check_history", "direction_for", "engine_health", "git_sha",
-    "history_path", "load_history", "run_metadata", "service_health",
+    "AuditEvent", "Ewma", "EwmaAnomaly", "FlightRecorder",
+    "HealthMonitor", "LifecycleAuditor", "LogHistogram",
+    "MetricsRegistry", "MetricsView", "NULL_AUDIT", "NULL_FLIGHT",
+    "NULL_MONITOR", "NULL_SPAN", "PhaseTracer", "RecordTimeline",
+    "Regression", "TicketFlight", "append_entry", "check_history",
+    "direction_for", "engine_health", "git_sha", "history_path",
+    "load_history", "run_metadata", "scheduler_health", "service_health",
     "stitch_chrome_trace", "validate_chrome_trace",
 ]

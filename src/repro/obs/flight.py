@@ -320,24 +320,35 @@ class FlightRecorder:
         return events
 
 
-def stitch_chrome_trace(tracer, recorder: FlightRecorder) -> Dict:
+def stitch_chrome_trace(tracer, recorder: FlightRecorder,
+                        monitor=None) -> Dict:
     """One Chrome trace: the tracer's phase spans / instants plus the
-    recorder's per-ticket async lanes, on a SHARED time origin (the
-    earliest stamp either side recorded) and globally sorted by
-    timestamp — loadable in Perfetto, ticket lanes aligned under the
-    plan/exec/commit spans. Passes ``validate_chrome_trace`` including
-    the async b/n/e invariants."""
-    t0s = [t for t in (tracer._t0, recorder.earliest_ts())
-           if t is not None]
+    recorder's per-ticket async lanes — and, when a
+    ``repro.obs.monitor.HealthMonitor`` is passed, its gauge series as
+    counter tracks (``ph: "C"``) — on a SHARED time origin (the
+    earliest stamp any side recorded) and globally sorted by
+    timestamp — loadable in Perfetto, ticket lanes and gauge plots
+    aligned under the plan/exec/commit spans. Passes
+    ``validate_chrome_trace`` including the async b/n/e invariants."""
+    sources = [tracer._t0, recorder.earliest_ts()]
+    if monitor is not None:
+        sources.append(monitor.earliest_ts())
+    t0s = [t for t in sources if t is not None]
     t0 = min(t0s) if t0s else 0.0
     trace = tracer.to_chrome_trace(t0=t0)
     events = trace["traceEvents"] + recorder.to_async_events(t0)
+    if monitor is not None:
+        events += monitor.to_counter_events(t0)
     # stable sort: each source is already monotonic, ties keep source
     # order (sync B/E stacks and async lane stacks both survive)
     events.sort(key=lambda e: e["ts"])
     trace["traceEvents"] = events
     trace["otherData"]["flight_tickets"] = recorder.completed
     trace["otherData"]["flight_dropped"] = recorder.dropped
+    if monitor is not None:
+        trace["otherData"]["health_samples"] = monitor.samples
+        trace["otherData"]["health_alerts"] = sum(
+            monitor.alerts.values())
     return trace
 
 

@@ -82,7 +82,48 @@ def engine_health(engine) -> Dict[str, object]:
     for k, v in host.items():
         v = np.asarray(v)
         health[f"{k}_by_shard"] = [round(float(x), 6) for x in v.ravel()]
+    aud = getattr(engine, "auditor", None)
+    if aud is not None and aud.enabled:
+        # lifecycle audit plane: cumulative state counters, the GC
+        # delay/pin certification, and the audit ring's own health
+        gc = aud.gc_report()
+        health.update({
+            "lifecycle_states": aud.state_counts(),
+            "lifecycle_gc_reclaimed": gc["reclaimed"],
+            "lifecycle_gc_delay_mean": round(gc["delay_mean"], 3),
+            "lifecycle_gc_delay_max": gc["delay_max"],
+            "lifecycle_gc_pin_stabbed": gc["pin_stabbed_reclaims"],
+            "lifecycle_audit_events": len(aud._events),
+            "lifecycle_audit_dropped": (aud.events_dropped
+                                        + aud.pending_dropped),
+        })
     return health
+
+
+def scheduler_health(sched) -> Dict[str, object]:
+    """Serving-plane gauges for a ``repro.serving.BohmScheduler``
+    (duck-typed): slot and page occupancy, queue depth, the Condition-3
+    pending-free backlog and the prefix-cache footprint, plus the
+    cumulative serving counters. Host-only state — never synchronises."""
+    pending = sum(len(p) for _, p in sched.pending_free)
+    return {
+        "active_slots": sched.num_active,
+        "slots": sched.slots,
+        "slot_fill": round(sched.num_active / max(sched.slots, 1), 6),
+        "queue_depth": len(sched.queue),
+        "free_pages": len(sched.free_pages),
+        "pages_total": sched.num_pages,
+        "page_fill": round(
+            1.0 - len(sched.free_pages) / max(sched.num_pages, 1), 6),
+        "pending_free_pages": pending,
+        "cached_pages": len(sched.cached_pages),
+        "prefix_cache_entries": len(sched.prefix_cache),
+        "ts_counter": sched.ts_counter,
+        "admitted": sched.stats["admitted"],
+        "completed": sched.stats["completed"],
+        "prefix_hits": sched.stats["prefix_hits"],
+        "pages_recycled": sched.stats["pages_recycled"],
+    }
 
 
 def service_health(service) -> Dict[str, object]:

@@ -243,7 +243,9 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
     unmatched E and no dangling B. Nestable async events (ph b/n/e —
     the flight recorder's per-ticket lanes) must additionally carry
     ``id`` and ``cat``, and b/e match LIFO per (pid, cat, id) with no
-    unmatched e and no dangling b. Returns summary counts; raises
+    unmatched e and no dangling b. Counter events (ph C — the health
+    monitor's gauge tracks) must carry non-empty ``args`` (the sample
+    values ARE the event). Returns summary counts; raises
     ``ValueError`` on the first violation (CI gates exported artifacts
     on this)."""
     events = trace.get("traceEvents")
@@ -252,7 +254,7 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
     stacks: Dict[tuple, List[str]] = {}
     async_stacks: Dict[tuple, List[str]] = {}
     last_ts = None
-    n_spans = n_instants = n_async = 0
+    n_spans = n_instants = n_async = n_counters = 0
     async_lanes = set()
     for i, ev in enumerate(events):
         for field in ("name", "ph", "ts", "pid", "tid"):
@@ -276,6 +278,10 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
             n_spans += 1
         elif ph == "i":
             n_instants += 1
+        elif ph == "C":
+            if not ev.get("args"):
+                raise ValueError(f"event {i}: counter 'C' without args")
+            n_counters += 1
         elif ph in ("b", "n", "e"):
             for field in ("id", "cat"):
                 if field not in ev:
@@ -305,4 +311,4 @@ def validate_chrome_trace(trace: Dict) -> Dict[str, int]:
         raise ValueError(f"{dangling} async 'b' events never closed")
     return {"spans": n_spans, "instants": n_instants,
             "async_spans": n_async, "async_lanes": len(async_lanes),
-            "events": len(events)}
+            "counters": n_counters, "events": len(events)}

@@ -28,7 +28,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.obs import MetricsRegistry
+from repro.obs import MetricsRegistry, PhaseTracer
 
 
 @dataclasses.dataclass
@@ -55,7 +55,8 @@ class StepPlan:
 class BohmScheduler:
     def __init__(self, *, slots: int, num_pages: int, page_size: int,
                  max_pages_per_seq: int,
-                 registry: Optional[MetricsRegistry] = None):
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer: Optional[PhaseTracer] = None):
         self.slots = slots
         self.page_size = page_size
         self.num_pages = num_pages
@@ -82,6 +83,20 @@ class BohmScheduler:
         for key in ("admitted", "completed", "prefix_hits",
                     "pages_recycled"):
             self.stats[key] = 0
+        # obs plane: admission / GC / planning decisions land as tracer
+        # instants (zero-cost when tracing is off), occupancy gauges
+        # evaluate lazily at registry.snapshot()
+        self.tracer = tracer if tracer is not None \
+            else PhaseTracer(enabled=False)
+        self.metrics.register_gauge("serving/active_slots",
+                                    lambda: self.num_active)
+        self.metrics.register_gauge("serving/free_pages",
+                                    lambda: len(self.free_pages))
+        self.metrics.register_gauge("serving/queue_depth",
+                                    lambda: len(self.queue))
+        self.metrics.register_gauge(
+            "serving/pending_free_pages",
+            lambda: sum(len(p) for _, p in self.pending_free))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -98,11 +113,17 @@ class BohmScheduler:
         the watermark (= oldest batch any live sequence was admitted in)."""
         live_batches = [r.ts for r in self.slot_req if r is not None]
         watermark = min(live_batches) if live_batches else self.ts_counter
+        recycled = 0
         while self.pending_free and self.pending_free[0][0] < watermark:
             _, pages = self.pending_free.popleft()
             for p in pages:
                 self.free_pages.append(p)
                 self.stats["pages_recycled"] += 1
+                recycled += 1
+        if recycled:
+            self.tracer.instant("serving/gc", recycled=recycled,
+                                watermark=watermark,
+                                free_pages=len(self.free_pages))
 
     # ------------------------------------------------------------------
     def admit(self) -> List[Tuple[Request, Optional[List[int]]]]:
@@ -144,6 +165,8 @@ class BohmScheduler:
                     self.prefix_cache[key] = pages
                     self.cached_pages.update(pages)
             self.stats["admitted"] += 1
+            self.tracer.instant("serving/admit", rid=req.rid, slot=s,
+                                ts=req.ts, prefix_hit=shared is not None)
             admitted.append((req, shared))
         return admitted
 
@@ -172,6 +195,9 @@ class BohmScheduler:
             offsets[s] = off
             positions[s] = pos
             self.seq_len[s] = pos + 1
+        self.tracer.instant("serving/plan_step",
+                            active=int(active.sum()),
+                            free_pages=len(self.free_pages))
         return StepPlan(active, tokens.astype(np.int32),
                         slot_pages.astype(np.int32),
                         offsets.astype(np.int32),
@@ -200,3 +226,10 @@ class BohmScheduler:
     @property
     def num_active(self) -> int:
         return sum(r is not None for r in self.slot_req)
+
+    def health(self) -> Dict[str, object]:
+        """Serving-plane health gauges (slot/page occupancy, queue depth,
+        cache size) — see ``repro.obs.health.scheduler_health``. Duck-
+        compatible with ``HealthMonitor(target=...)``."""
+        from repro.obs.health import scheduler_health
+        return scheduler_health(self)

@@ -29,21 +29,29 @@ from repro.store.pages import (PageSlab, commit_paged, free_page_count,
                                mask_gathered_windows, page_owner_index,
                                paged_occupancy, slab_fill_fraction)
 from repro.store.policy import decay_pressure, reassign_k, reassign_stats
-from repro.store.ring import (INF_TS, VersionRing, commit_versions,
-                              gather_windows, gc_ring, init_ring,
-                              pin_stabbed, ring_fill_fraction,
+from repro.store.ring import (AUDIT_COMMITTED, AUDIT_GC_RECLAIMED,
+                              AUDIT_OVERWROTE_DEAD, AUDIT_OVERWROTE_LIVE,
+                              AUDIT_PAGE_DROPPED, AUDIT_SPILL_DROPPED,
+                              AUDIT_SPILL_OVERWROTE, AUDIT_SPILLED,
+                              AUDIT_STATE_NAMES, INF_TS, VersionRing,
+                              commit_versions, gather_windows, gc_ring,
+                              init_ring, pin_stabbed, ring_fill_fraction,
                               ring_occupancy)
 from repro.store.sharded import (ShardedVersionStore, commit_sharded,
                                  from_global, gather_windows_sharded,
-                                 gc_sharded, global_record_ids,
-                                 init_sharded_store, resolve_sharded,
-                                 store_health, store_occupancy, to_global,
-                                 unshard)
+                                 gc_sharded, gc_sharded_audited,
+                                 global_record_ids, init_sharded_store,
+                                 resolve_sharded, store_health,
+                                 store_occupancy, to_global, unshard)
 from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
                                spill_commit, spill_fill_fraction,
                                spill_occupancy)
 
 __all__ = [
+    "AUDIT_COMMITTED", "AUDIT_GC_RECLAIMED", "AUDIT_OVERWROTE_DEAD",
+    "AUDIT_OVERWROTE_LIVE", "AUDIT_PAGE_DROPPED", "AUDIT_SPILL_DROPPED",
+    "AUDIT_SPILL_OVERWROTE", "AUDIT_SPILLED", "AUDIT_STATE_NAMES",
+    "gc_sharded_audited",
     "INF_TS", "VersionRing", "commit_versions", "gather_windows",
     "gc_ring", "init_ring", "pin_stabbed", "ring_occupancy",
     "ShardedVersionStore", "commit_sharded", "from_global",

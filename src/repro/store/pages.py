@@ -51,7 +51,9 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.store.ring import INF_TS, pin_stabbed
+from repro.store.ring import (AUDIT_COMMITTED, AUDIT_OVERWROTE_DEAD,
+                              AUDIT_OVERWROTE_LIVE, AUDIT_PAGE_DROPPED,
+                              INF_TS, pin_stabbed)
 
 
 @jax.tree_util.register_dataclass
@@ -199,7 +201,8 @@ def commit_paged(slab: PageSlab, w_rec: jax.Array, w_key: jax.Array,
                  ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
                  k_eff: Optional[jax.Array] = None,
                  pin_ts: Optional[jax.Array] = None,
-                 with_evictees: bool = False
+                 with_evictees: bool = False,
+                 with_audit: bool = False
                  ) -> Tuple[PageSlab, Dict[str, jax.Array]]:
     """The paged twin of ``commit_versions`` — same contract, same
     metrics keys (so the sharded aggregation and the engine's pressure
@@ -324,6 +327,28 @@ def commit_paged(slab: PageSlab, w_rec: jax.Array, w_key: jax.Array,
         ev_payload = jnp.concatenate([tgt_payload, data_s])
         ev_valid = jnp.concatenate([hit_live, drop_live])
 
+    if with_audit:
+        # lifecycle audit tap — as the dense ring, except a drop caused
+        # by free-list exhaustion (kept by the ring rule but no page to
+        # land in) is stamped PAGE_DROPPED: the allocator, not K-overflow,
+        # destroyed it.
+        alloc_fail = keep & ~landed
+        ins_state = jnp.where(valid_s, AUDIT_COMMITTED, 0)
+        vic_state = jnp.where(hit_live, AUDIT_OVERWROTE_LIVE,
+                              jnp.where(hit_dead, AUDIT_OVERWROTE_DEAD, 0))
+        drop_state = jnp.where(
+            alloc_fail, AUDIT_PAGE_DROPPED,
+            jnp.where(drop_live & ~alloc_fail, AUDIT_OVERWROTE_LIVE,
+                      jnp.where(dropped & ~drop_live & ~alloc_fail,
+                                AUDIT_OVERWROTE_DEAD, 0)))
+        audit_arrays = {
+            "audit_rec": jnp.concatenate([safe_rec, safe_rec, safe_rec]),
+            "audit_begin": jnp.concatenate([beg_s, tgt_begin, beg_s]),
+            "audit_end": jnp.concatenate([end_s, tgt_end, end_s]),
+            "audit_state": jnp.concatenate(
+                [ins_state, vic_state, drop_state]).astype(jnp.int32),
+        }
+
     begin = begin.reshape(-1).at[flat].set(beg_s, mode="drop").reshape(P, S)
     end = end.reshape(-1).at[flat].set(end_s, mode="drop").reshape(P, S)
     payload = payload.reshape(P * S, -1).at[flat].set(
@@ -359,6 +384,9 @@ def commit_paged(slab: PageSlab, w_rec: jax.Array, w_key: jax.Array,
         metrics.update(evict_rec=ev_rec, evict_begin=ev_begin,
                        evict_end=ev_end, evict_payload=ev_payload,
                        evict_valid=ev_valid)
+    if with_audit:
+        metrics["ring_committed"] = jnp.sum(valid_s)
+        metrics.update(audit_arrays)
     return new_slab, metrics
 
 

@@ -57,6 +57,30 @@ import jax.numpy as jnp
 
 INF_TS = jnp.iinfo(jnp.int32).max
 
+# Version-lifecycle audit state codes. They are defined HERE (not in
+# ``repro.obs.lifecycle``, which re-exports them) because the store's
+# commit paths stamp them device-side when ``with_audit=True`` and the
+# store must not import the obs layer. Code 0 = masked / no event.
+AUDIT_COMMITTED = 1        # version inserted into the primary store
+AUDIT_OVERWROTE_LIVE = 2   # pin-live version destroyed by a K-overflow
+AUDIT_OVERWROTE_DEAD = 3   # dead (unreachable) version destroyed
+AUDIT_SPILLED = 4          # live evictee placed into the spill pool
+AUDIT_SPILL_DROPPED = 5    # live evictee offered to spill, bucket full
+AUDIT_SPILL_OVERWROTE = 6  # spill-resident version lost to a newer one
+AUDIT_PAGE_DROPPED = 7     # insert lost: page-table allocation failed
+AUDIT_GC_RECLAIMED = 8     # reclaimed by a watermark sweep (audited GC)
+
+AUDIT_STATE_NAMES = {
+    AUDIT_COMMITTED: "committed",
+    AUDIT_OVERWROTE_LIVE: "overwritten_live",
+    AUDIT_OVERWROTE_DEAD: "overwritten_dead",
+    AUDIT_SPILLED: "spilled",
+    AUDIT_SPILL_DROPPED: "spill_dropped",
+    AUDIT_SPILL_OVERWROTE: "spill_overwritten",
+    AUDIT_PAGE_DROPPED: "page_dropped",
+    AUDIT_GC_RECLAIMED: "gc_reclaimed",
+}
+
 
 def pin_stabbed(begin: jax.Array, end: jax.Array,
                 pin_ts: Optional[jax.Array]) -> jax.Array:
@@ -130,7 +154,8 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
                     ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
                     k_eff: Optional[jax.Array] = None,
                     pin_ts: Optional[jax.Array] = None,
-                    with_evictees: bool = False
+                    with_evictees: bool = False,
+                    with_audit: bool = False
                     ) -> Tuple[VersionRing, Dict[str, jax.Array]]:
     """Batch-barrier ring maintenance: GC conditions 1+2, then commit ALL
     of the batch's versions (not just segment-final ones).
@@ -253,6 +278,26 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
         ev_payload = jnp.concatenate([tgt_payload, data_s])
         ev_valid = jnp.concatenate([hit_live, drop_live])
 
+    if with_audit:
+        # lifecycle audit tap: one event slot per sorted placeholder for
+        # each of {insert, eviction victim, overflow drop} — fixed [3N]
+        # arrays, state 0 where masked. Victim rows carry the DESTROYED
+        # version's window (gathered pre-scatter); drop rows carry the
+        # never-inserted version's own window.
+        ins_state = jnp.where(valid_s, AUDIT_COMMITTED, 0)
+        vic_state = jnp.where(hit_live, AUDIT_OVERWROTE_LIVE,
+                              jnp.where(hit_dead, AUDIT_OVERWROTE_DEAD, 0))
+        drop_state = jnp.where(drop_live, AUDIT_OVERWROTE_LIVE,
+                               jnp.where(dropped & ~drop_live,
+                                         AUDIT_OVERWROTE_DEAD, 0))
+        audit_arrays = {
+            "audit_rec": jnp.concatenate([safe_rec, safe_rec, safe_rec]),
+            "audit_begin": jnp.concatenate([beg_s, tgt_begin, beg_s]),
+            "audit_end": jnp.concatenate([end_s, tgt_end, end_s]),
+            "audit_state": jnp.concatenate(
+                [ins_state, vic_state, drop_state]).astype(jnp.int32),
+        }
+
     begin = begin.reshape(-1).at[flat].set(beg_s, mode="drop").reshape(R, K)
     end = end.reshape(-1).at[flat].set(end_s, mode="drop").reshape(R, K)
     payload = ring.payload.reshape(R * K, -1).at[flat].set(
@@ -283,6 +328,9 @@ def commit_versions(ring: VersionRing, w_rec: jax.Array, w_key: jax.Array,
         metrics.update(evict_rec=ev_rec, evict_begin=ev_begin,
                        evict_end=ev_end, evict_payload=ev_payload,
                        evict_valid=ev_valid)
+    if with_audit:
+        metrics["ring_committed"] = jnp.sum(valid_s)
+        metrics.update(audit_arrays)
     return new_ring, metrics
 
 

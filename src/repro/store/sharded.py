@@ -46,10 +46,12 @@ import jax.numpy as jnp
 from repro.kernels import ops
 from repro.store.pages import (PageSlab, commit_paged, gather_windows_paged,
                                gc_pages, init_page_slab,
-                               mask_gathered_windows, paged_occupancy,
-                               slab_fill_fraction)
-from repro.store.ring import (INF_TS, VersionRing, commit_versions,
-                              gather_windows, gc_ring, ring_occupancy)
+                               mask_gathered_windows, page_owner_index,
+                               paged_occupancy, slab_fill_fraction)
+from repro.store.ring import (AUDIT_SPILL_DROPPED, AUDIT_SPILL_OVERWROTE,
+                              AUDIT_SPILLED, INF_TS, VersionRing,
+                              commit_versions, gather_windows, gc_ring,
+                              pin_stabbed, ring_occupancy)
 from repro.store.spill import (SpillPool, gc_spill, init_spill_pool,
                                spill_buckets_for, spill_commit,
                                spill_fill_fraction, spill_occupancy)
@@ -300,17 +302,25 @@ def _mask_to_shard(n: int, shard, w_rec, w_key, w_valid):
 
 def _commit_one_shard(ring_s, spill_s: Optional[SpillPool],
                       k_eff_s: jax.Array, rec_l, key_l, owned, w_begin_ts,
-                      w_end_ts, w_data, watermark, ts_window, pin_ts):
+                      w_end_ts, w_data, watermark, ts_window, pin_ts,
+                      with_audit: bool = False):
     """One shard's full commit: primary maintenance (dense ring or paged
     slab — same contract, dispatched on the pytree type), then its live
-    evictees into the local spill pool (same clamped watermark)."""
+    evictees into the local spill pool (same clamped watermark).
+
+    ``with_audit=True`` additionally emits fixed-shape lifecycle audit
+    arrays (``audit_rec/begin/end/state``, shard-LOCAL record ids) — the
+    primary's 3 event segments plus, when a spill pool is attached, the
+    per-evictee placement outcome (SPILLED / SPILL_DROPPED) and the spill
+    versions those placements destroyed (SPILL_OVERWROTE)."""
     with_spill = spill_s is not None
     commit_fn = commit_paged if isinstance(ring_s, PageSlab) \
         else commit_versions
     ring_o, m = commit_fn(ring_s, rec_l, key_l, owned, w_begin_ts,
                           w_end_ts, w_data, watermark,
                           ts_window=ts_window, k_eff=k_eff_s,
-                          pin_ts=pin_ts, with_evictees=with_spill)
+                          pin_ts=pin_ts, with_evictees=with_spill,
+                          with_audit=with_audit)
     if with_spill:
         ev = {k: m.pop(k) for k in _EVICT_KEYS}
         wm = jnp.asarray(watermark, jnp.int32)
@@ -319,7 +329,27 @@ def _commit_one_shard(ring_s, spill_s: Optional[SpillPool],
         spill_s, sm = spill_commit(spill_s, ev["evict_rec"],
                                    ev["evict_begin"], ev["evict_end"],
                                    ev["evict_payload"], ev["evict_valid"],
-                                   wm, pin_ts=pin_ts)
+                                   wm, pin_ts=pin_ts,
+                                   with_audit=with_audit)
+        if with_audit:
+            placed = sm.pop("spill_audit_placed")
+            v_valid = sm.pop("spill_victim_valid")
+            v_rec = sm.pop("spill_victim_rec")
+            v_begin = sm.pop("spill_victim_begin")
+            v_end = sm.pop("spill_victim_end")
+            offered = ev["evict_valid"]
+            sp_state = jnp.where(placed, AUDIT_SPILLED,
+                                 jnp.where(offered, AUDIT_SPILL_DROPPED, 0))
+            vic_state = jnp.where(v_valid, AUDIT_SPILL_OVERWROTE, 0)
+            m["audit_rec"] = jnp.concatenate(
+                [m["audit_rec"], ev["evict_rec"], v_rec])
+            m["audit_begin"] = jnp.concatenate(
+                [m["audit_begin"], ev["evict_begin"], v_begin])
+            m["audit_end"] = jnp.concatenate(
+                [m["audit_end"], ev["evict_end"], v_end])
+            m["audit_state"] = jnp.concatenate(
+                [m["audit_state"], sp_state.astype(jnp.int32),
+                 vic_state.astype(jnp.int32)])
         m.update(sm)
     return ring_o, spill_s, m
 
@@ -330,7 +360,8 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
                    w_data: jax.Array, watermark: jax.Array,
                    mesh=None, axis: str = "cc",
                    ts_window: Optional[Tuple[jax.Array, jax.Array]] = None,
-                   pin_ts: Optional[jax.Array] = None
+                   pin_ts: Optional[jax.Array] = None,
+                   with_audit: bool = False
                    ) -> Tuple[ShardedVersionStore, Dict[str, jax.Array]]:
     """Commit ALL batch versions into the partitioned rings (and live
     evictees into the spill pools).
@@ -343,6 +374,12 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
     (the epoch's global timestamp span — see ``commit_versions``) and
     ``pin_ts`` (registered snapshot pins, INF_TS-padded) are global
     scalars/vectors, so they replicate to every shard unchanged.
+
+    ``with_audit=True`` adds the lifecycle audit arrays
+    (``audit_rec/begin/end/state`` flattened over shards, record ids
+    GLOBAL, rec = -1 where the state is 0/masked) and the
+    ``ring_committed`` scalar — all lazy device values; nothing here
+    synchronises.
     """
     n = store.n_shards
     with_spill = store.spill is not None
@@ -351,9 +388,12 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
         prim, spill0, metrics = _commit_one_shard(
             _ring0(store), _take_spill(store, 0), store.k_eff[0],
             w_rec, w_key, w_valid, w_begin_ts, w_end_ts, w_data,
-            watermark, ts_window, pin_ts)
+            watermark, ts_window, pin_ts, with_audit=with_audit)
         for k in ("ring_overwrote_rec", "ring_overwrote_dead_rec"):
             metrics[k] = metrics[k][None]
+        if with_audit:
+            metrics["audit_rec"] = jnp.where(
+                metrics["audit_state"] > 0, metrics["audit_rec"], -1)
         new_spill = None if spill0 is None else jax.tree.map(
             lambda x: x[None], spill0)
         return dataclasses.replace(
@@ -365,7 +405,8 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
                                              w_valid)
         return _commit_one_shard(prim_s, spill_s, k_eff_s, rec_l, key_l,
                                  owned, w_begin_ts, w_end_ts, w_data,
-                                 watermark, ts_window, pin_ts)
+                                 watermark, ts_window, pin_ts,
+                                 with_audit=with_audit)
 
     if mesh is not None and axis in mesh.shape and mesh.shape[axis] == n:
         from jax.sharding import PartitionSpec as P
@@ -381,7 +422,7 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
 
         out_struct = (_page_struct() if paged else _ring_struct(),
                       None if not with_spill else _spill_struct(),
-                      _metrics_struct(with_spill, paged))
+                      _metrics_struct(with_spill, paged, with_audit))
         prim, spill, per = _shard_map(
             body, mesh=mesh,
             in_specs=jax.tree.map(lambda _: P(axis),
@@ -417,6 +458,17 @@ def commit_sharded(store: ShardedVersionStore, w_rec: jax.Array,
                   "spill_overwrote", "spill_overwrote_pinned",
                   "spill_occupancy"):
             metrics[k] = jnp.sum(per[k])
+    if with_audit:
+        metrics["ring_committed"] = jnp.sum(per["ring_committed"])
+        # shard-local audit record ids -> global (r = local * n + shard),
+        # flattened over the shard axis; masked entries stay rec = -1
+        shard_ix = jnp.arange(n, dtype=jnp.int32)[:, None]
+        state = per["audit_state"]
+        metrics["audit_rec"] = jnp.where(
+            state > 0, per["audit_rec"] * n + shard_ix, -1).reshape(-1)
+        metrics["audit_begin"] = per["audit_begin"].reshape(-1)
+        metrics["audit_end"] = per["audit_end"].reshape(-1)
+        metrics["audit_state"] = state.reshape(-1)
     return dataclasses.replace(_with_primary(store, prim),
                                spill=spill), metrics
 
@@ -436,7 +488,8 @@ def _spill_struct():
     return SpillPool(begin=z, end=z, rec=z, payload=z)
 
 
-def _metrics_struct(with_spill: bool = False, paged: bool = False):
+def _metrics_struct(with_spill: bool = False, paged: bool = False,
+                    with_audit: bool = False):
     z = jnp.zeros((), jnp.int32)
     m = {"ring_evicted": z, "ring_overflow_dropped": z,
          "ring_overwrote_live": z, "ring_overwrote_dead": z,
@@ -449,6 +502,9 @@ def _metrics_struct(with_spill: bool = False, paged: bool = False):
         m.update({"spill_freed": z, "spill_admitted": z,
                   "spill_dropped": z, "spill_overwrote": z,
                   "spill_overwrote_pinned": z, "spill_occupancy": z})
+    if with_audit:
+        m.update({"ring_committed": z, "audit_rec": z, "audit_begin": z,
+                  "audit_end": z, "audit_state": z})
     return m
 
 
@@ -475,6 +531,97 @@ def gc_sharded(store: ShardedVersionStore, watermark: jax.Array
         evicted = evicted + freed
     return dataclasses.replace(_with_primary(store, prim),
                                spill=spill), evicted
+
+
+def _audit_dead_flat(store: ShardedVersionStore, watermark: jax.Array
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Flatten every version the sweep at ``watermark`` is about to
+    reclaim — primary (dense or paged) plus spill — into parallel
+    (rec_global, begin, end, dead) arrays. Record ids are global
+    (``-1`` where not reclaimed / unowned)."""
+    n, Rl = store.n_shards, store.records_per_shard
+    wm = jnp.asarray(watermark, jnp.int32)
+    parts = []
+    if store.rings is not None:
+        r = store.rings
+        dead = (r.begin != INF_TS) & (r.end <= wm)         # [n, Rl, K]
+        rec_g = jnp.broadcast_to(
+            global_record_ids(n, Rl)[..., None], dead.shape)
+        parts.append((rec_g, r.begin, r.end, dead))
+    else:
+        p = store.pages
+        dead = (p.begin != INF_TS) & (p.end <= wm)         # [n, P, S]
+        owner = jax.vmap(
+            lambda pt: page_owner_index(pt, p.num_pages)[0])(p.page_table)
+        shard = jnp.arange(n, dtype=jnp.int32)[:, None]
+        rec_g = jnp.where(owner >= 0, owner * n + shard, -1)   # [n, P]
+        rec_g = jnp.broadcast_to(rec_g[..., None], dead.shape)
+        parts.append((rec_g, p.begin, p.end, dead & (rec_g >= 0)))
+    if store.spill is not None:
+        sp = store.spill
+        dead = (sp.rec >= 0) & (sp.end <= wm)              # [n, B, S]
+        shard = jnp.arange(n, dtype=jnp.int32)[:, None, None]
+        rec_g = jnp.where(sp.rec >= 0, sp.rec * n + shard, -1)
+        parts.append((rec_g, sp.begin, sp.end, dead))
+    rec = jnp.concatenate(
+        [jnp.where(d, r, -1).reshape(-1) for r, _, _, d in parts])
+    begin = jnp.concatenate([b.reshape(-1) for _, b, _, _ in parts])
+    end = jnp.concatenate([e.reshape(-1) for _, _, e, _ in parts])
+    dead = jnp.concatenate([d.reshape(-1) for _, _, _, d in parts])
+    return rec, begin, end, dead
+
+
+def gc_sharded_audited(store: ShardedVersionStore, watermark: jax.Array,
+                       pin_ts: Optional[jax.Array] = None,
+                       event_cap: int = 256
+                       ) -> Tuple[ShardedVersionStore, jax.Array,
+                                  Dict[str, jax.Array]]:
+    """``gc_sharded`` plus the GC audit: how long after death each
+    reclaimed version was actually swept (the Ben-David et al.
+    death->reclamation delay) and whether any registered pin could still
+    have stabbed it (must be impossible — ``watermark <= min(pin_ts)``
+    by construction; the audit *certifies* rather than assumes it).
+
+    Returns ``(store, evicted, audit)`` where ``audit`` holds LAZY
+    device values only (the auditor harvests them at boundaries):
+
+      gc_watermark      []    the sweep's watermark
+      gc_dead_total     []    versions reclaimed by this sweep
+      gc_delay_sum/max  []    sum / max of (watermark - end) over them
+      gc_delay_hist     [16]  log2-bucketed delay histogram
+      gc_pin_stabbed    []    reclaimed versions a pin stabs (cert == 0)
+      gc_event_rec/begin/end [event_cap]  the first ``event_cap``
+                        reclaimed versions (global rec, -1/INF padded)
+    """
+    wm = jnp.asarray(watermark, jnp.int32)
+    rec, begin, end, dead = _audit_dead_flat(store, wm)
+    delay = jnp.where(dead, wm - end, 0)
+    bucket = jnp.clip(
+        jnp.floor(jnp.log2(delay.astype(jnp.float32) + 1.0)),
+        0, 15).astype(jnp.int32)
+    hist = jnp.zeros((16,), jnp.int32).at[
+        jnp.where(dead, bucket, 16)].add(1, mode="drop")
+    stabbed = dead & pin_stabbed(begin, end, pin_ts)
+    n_flat = dead.shape[0]
+    idx = jnp.nonzero(dead, size=int(event_cap), fill_value=n_flat)[0]
+
+    def take(x, fill):
+        return jnp.concatenate(
+            [x, jnp.full((1,), fill, x.dtype)])[jnp.minimum(idx, n_flat)]
+
+    audit = {
+        "gc_watermark": wm,
+        "gc_dead_total": jnp.sum(dead),
+        "gc_delay_sum": jnp.sum(delay),
+        "gc_delay_max": jnp.max(delay),
+        "gc_delay_hist": hist,
+        "gc_pin_stabbed": jnp.sum(stabbed),
+        "gc_event_rec": take(rec, -1),
+        "gc_event_begin": take(begin, INF_TS),
+        "gc_event_end": take(end, INF_TS),
+    }
+    new_store, evicted = gc_sharded(store, wm)
+    return new_store, evicted, audit
 
 
 # ---------------------------------------------------------------------------

@@ -112,7 +112,8 @@ def gc_spill(pool: SpillPool, watermark: jax.Array
 def spill_commit(pool: SpillPool, ev_rec: jax.Array, ev_begin: jax.Array,
                  ev_end: jax.Array, ev_payload: jax.Array,
                  ev_valid: jax.Array, watermark: jax.Array,
-                 pin_ts: Optional[jax.Array] = None
+                 pin_ts: Optional[jax.Array] = None,
+                 with_audit: bool = False
                  ) -> Tuple[SpillPool, Dict[str, jax.Array]]:
     """Absorb one commit's live evictees into the pool.
 
@@ -182,4 +183,27 @@ def spill_commit(pool: SpillPool, ev_rec: jax.Array, ev_begin: jax.Array,
         "spill_overwrote_pinned": jnp.sum(victim_pinned),
         "spill_occupancy": spill_occupancy(new_pool),
     }
+    if with_audit:
+        # lifecycle audit tap: per-evictee placement outcome plus the
+        # (rec, begin, end) of any spill-resident version this placement
+        # destroyed — both scattered back to INPUT order so the caller
+        # can pair them with its own ``ev_*`` arrays.
+        Ne = ev_rec.shape[0]
+
+        def to_input(sorted_vals, fill):
+            init = jnp.full((Ne,), fill, sorted_vals.dtype)
+            return init.at[order].set(sorted_vals)
+
+        v_rec = pool.rec.reshape(-1)[safe]
+        v_begin = pool.begin.reshape(-1)[safe]
+        v_end = pool.end.reshape(-1)[safe]
+        metrics.update(
+            spill_audit_placed=to_input(placed, False),
+            spill_victim_valid=to_input(victim_occ, False),
+            spill_victim_rec=to_input(jnp.where(victim_occ, v_rec, -1), -1),
+            spill_victim_begin=to_input(
+                jnp.where(victim_occ, v_begin, INF_TS), INF_TS),
+            spill_victim_end=to_input(
+                jnp.where(victim_occ, v_end, INF_TS), INF_TS),
+        )
     return new_pool, metrics

@@ -1,0 +1,386 @@
+"""Version-lifecycle auditor (repro.obs.lifecycle) + health monitor
+(repro.obs.monitor): the zero-fence contract (auditor off OR on adds
+ZERO fences and leaves engine results byte-identical), the telescoping
+conservation identity and the GC pin certification across randomized
+pin/commit/sweep interleavings at 1 and 2 shards, the time-travel
+inspector's found=False explanations on saturated spill/paged streams,
+the monitor's EWMA alerting + JSONL log + Chrome counter tracks, and
+the ft.monitor EWMA deprecation shim."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import BohmEngine
+from repro.core.txn import Workload, make_batch
+from repro.obs import (NULL_AUDIT, NULL_MONITOR, FlightRecorder,
+                       HealthMonitor, LifecycleAuditor, PhaseTracer,
+                       stitch_chrome_trace, validate_chrome_trace)
+from repro.obs.lifecycle import (AUDIT_COMMITTED, AUDIT_GC_RECLAIMED,
+                                 AUDIT_STATE_NAMES)
+from repro.service import TxnService
+
+T, OPS, R = 16, 3, 24
+HOT = 8
+
+
+def _inc_workload():
+    def rmw(vals, args):
+        return vals.at[..., 0].add(args[0]), jnp.zeros((), bool)
+
+    def read_only(vals, args):
+        return vals, jnp.zeros((), bool)
+
+    return Workload(name="inc", n_read=OPS, n_write=OPS, payload_words=2,
+                    branches=(rmw, read_only))
+
+
+def _random_batch(rng, lo=0, hi=R, t=T, w_prob=0.6):
+    rng = np.random.default_rng(rng) if isinstance(rng, int) else rng
+    reads = rng.integers(lo, hi, (t, OPS))
+    writes = np.where(rng.random((t, OPS)) < w_prob, reads, -1)
+    types = rng.integers(0, 2, t)
+    args = rng.integers(1, 5, (t, 1))
+    return make_batch(reads, writes, types, args)
+
+
+def _engine(config, n_shards, auditor, num_records=R):
+    if config == "spill":
+        return BohmEngine(num_records, _inc_workload(), ring_slots=4,
+                          n_shards=n_shards, spill_buckets=4,
+                          spill_slots=4, auditor=auditor)
+    # paged: a few pages of headroom over the one-page-per-record floor
+    # so hot records hit allocation failure under load
+    local = -(-num_records // n_shards)
+    return BohmEngine(num_records, _inc_workload(), ring_slots=4,
+                      n_shards=n_shards, paged=True, page_slots=2,
+                      pages_per_shard=local + 4, spill_slots=0,
+                      auditor=auditor)
+
+
+def _audit(**kw):
+    kw.setdefault("capacity", 1 << 16)
+    kw.setdefault("pending_cap", 1 << 10)
+    kw.setdefault("per_record_cap", 1 << 12)
+    return LifecycleAuditor(**kw)
+
+
+# ------------------------------------------------------- zero-sync contract
+def _run_stream(auditor, n=6):
+    """Conflict-aware OOO stream + audited sweep; returns (engine, reads,
+    final snapshot)."""
+    eng = BohmEngine(R, _inc_workload(), ring_slots=4, spill_buckets=4,
+                     spill_slots=4, auditor=auditor)
+    svc = TxnService(eng, max_inflight=2, admission_window=4,
+                     max_inflight_execs=2)
+    tickets = svc.submit_many([_random_batch(s) for s in range(n)])
+    reads = [np.asarray(svc.wait(t).read_vals) for t in tickets]
+    eng.gc_sweep()
+    svc.drain()
+    return eng, reads, np.asarray(eng.snapshot())
+
+
+def test_auditor_adds_zero_fences_and_results_identical(monkeypatch):
+    """The auditor — OFF or ON — introduces no jax fences (audit arrays
+    ride the commit dispatch; the one device_get happens at the sweep /
+    drain boundary) and leaves reads and the final store byte-identical."""
+    _, want_reads, want_base = _run_stream(None)      # no auditor at all
+
+    calls = {"n": 0}
+    real = jax.block_until_ready
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    fences = {}
+    for name, auditor in [
+            ("off", LifecycleAuditor(capacity=4, enabled=False)),
+            ("on", _audit())]:
+        calls["n"] = 0
+        monkeypatch.setattr(jax, "block_until_ready", counting)
+        eng, reads, base = _run_stream(auditor)
+        monkeypatch.setattr(jax, "block_until_ready", real)
+        fences[name] = calls["n"]
+        for w, g in zip(want_reads, reads):
+            np.testing.assert_array_equal(w, g)
+        np.testing.assert_array_equal(want_base, base)
+        assert eng.auditor is auditor
+    assert fences["on"] == fences["off"]
+    # and the ON run actually audited something
+    assert auditor.events(state=AUDIT_COMMITTED)
+
+
+def test_null_audit_is_inert():
+    eng, _, _ = _run_stream(None)
+    assert eng.auditor is NULL_AUDIT
+    assert NULL_AUDIT.events() == []
+    assert NULL_AUDIT.harvest() == 0
+    # hooks are no-ops: metrics dicts pass through untouched
+    m = {"audit_rec": 1}
+    NULL_AUDIT.on_commit(m)
+    assert m == {"audit_rec": 1}
+
+
+def test_audit_keys_never_leak_into_results():
+    auditor = _audit()
+    eng = _engine("spill", 1, auditor)
+    _, metrics = eng.run_batch(_random_batch(0))
+    for key in ("audit_rec", "audit_begin", "audit_end", "audit_state"):
+        assert key not in metrics
+
+
+# -------------------------------------- conservation + GC pin certification
+@pytest.mark.parametrize("config", ["spill", "paged"])
+@pytest.mark.parametrize("n_shards", [1, 2])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_telescope_and_gc_pin_invariant(config, n_shards, seed):
+    """Across randomized pin/commit/sweep interleavings: (1) the state
+    counts telescope — every version ever committed has exactly one
+    terminal disposition or is still resident — and (2) no audited sweep
+    ever reclaimed a version a registered pin could still resolve."""
+    rng = np.random.default_rng(seed)
+    auditor = _audit()
+    eng = _engine(config, n_shards, auditor)
+    pins = []
+    for _ in range(24):
+        op = rng.integers(0, 5)
+        if op == 0 and len(pins) < 3:
+            pins.append(eng.begin_snapshot())
+        elif op == 1 and pins:
+            eng.release_snapshot(pins.pop(int(rng.integers(len(pins)))))
+        elif op == 2:
+            eng.gc_sweep()
+        else:
+            eng.run_batch(_random_batch(rng, hi=HOT))
+    mid = auditor.telescope()
+    assert mid["balanced"], mid
+    for p in pins:
+        eng.release_snapshot(p)
+    eng.gc_sweep()
+
+    t = auditor.telescope()
+    assert t["balanced"], t
+    assert t["lhs_committed_total"] > R      # the stream did commit
+
+    rep = auditor.gc_report()
+    assert rep["pin_stabbed_reclaims"] == 0
+    # finite delay distribution: the histogram accounts for every
+    # audited reclamation, and the max delay is a real timestamp gap
+    assert sum(rep["delay_hist_log2"]) == rep["reclaimed"]
+    assert 0 <= rep["delay_max"] < 2**31 - 1
+    if rep["reclaimed"]:
+        assert rep["delay_mean"] > 0
+        assert rep["events_captured"] > 0
+        for ev in auditor.events(state=AUDIT_GC_RECLAIMED):
+            assert ev.end_ts <= ev.cause_ts      # dead at its sweep's wm
+
+
+# ------------------------------------------------ the time-travel inspector
+@pytest.mark.parametrize("config", ["spill", "paged"])
+def test_saturated_stream_explains_every_found_false(config):
+    """Hold a pin, saturate the store, probe the pinned snapshot: every
+    found=False answer must be explained by a CONCRETE drop event (the
+    store never answers stale — the auditor says why it answered not-
+    found)."""
+    auditor = _audit()
+    if config == "spill":
+        # a 2x2 spill pool cannot hold the pinned history of 8 hot keys
+        eng = BohmEngine(R, _inc_workload(), ring_slots=4,
+                         spill_buckets=2, spill_slots=2, auditor=auditor)
+    else:
+        eng = _engine(config, 1, auditor)
+    rng = np.random.default_rng(3)
+    for _ in range(2):
+        eng.run_batch(_random_batch(rng, hi=HOT, w_prob=0.8))
+    pin = eng.begin_snapshot()
+    for i in range(8):
+        eng.run_batch(_random_batch(rng, hi=HOT, w_prob=0.8))
+        if i % 3 == 2:
+            eng.gc_sweep()
+
+    vals, found = eng.snapshot_read(np.arange(R), ts=pin.ts)
+    found = np.asarray(found)
+    assert not found.all(), "stream never saturated the store"
+    for r in np.nonzero(~found)[0]:
+        exp = auditor.explain_read(int(r), pin.ts)
+        assert not exp["found"]
+        assert exp["event"] is not None, (r, exp)
+        assert exp["event"].covers(pin.ts)
+        assert exp["reason"] in AUDIT_STATE_NAMES.values()
+    # found=True probes resolve to a resident version on some tier
+    for r in np.nonzero(found)[0][:4]:
+        exp = auditor.explain_read(int(r), pin.ts)
+        assert exp["found"] and exp["reason"].startswith("resident_")
+    eng.release_snapshot(pin)
+
+
+def test_inspect_record_timeline_and_health_surface():
+    auditor = _audit()
+    eng = _engine("spill", 1, auditor)
+    eng.run_batch(_random_batch(5, w_prob=1.0))
+    eng.snapshot()                       # harvest boundary
+    now = eng.current_ts()
+    written = sorted({int(e.record)
+                      for e in auditor.events(state=AUDIT_COMMITTED)})
+    assert written
+    tl = eng.inspect_record(written[0])
+    v = tl.visible_at(now)
+    assert v is not None and v["tier"] == "primary"
+    assert tl.explain(now)["found"]
+    assert any(e.state == AUDIT_COMMITTED for e in tl.events)
+    # never-written record: explained as such
+    idle = next(r for r in range(R) if r not in written)
+    assert eng.inspect_record(idle).explain(now)["reason"] in (
+        "resident_primary", "never_written")
+
+    h = eng.health()
+    assert h["lifecycle_gc_pin_stabbed"] == 0
+    assert h["lifecycle_states"]["committed"] > 0
+    assert h["lifecycle_audit_events"] > 0
+
+
+def test_inspect_requires_enabled_auditor():
+    eng = BohmEngine(R, _inc_workload(), ring_slots=4)
+    with pytest.raises(RuntimeError):
+        eng.inspect_record(0)
+
+
+# ----------------------------------------------------------- health monitor
+class _FakeTarget:
+    """Scripted health() source for monitor unit tests."""
+
+    def __init__(self, lags):
+        self.lags = list(lags)
+        self.calls = 0
+
+    def health(self):
+        self.calls += 1
+        lag = self.lags.pop(0) if self.lags else 0.0
+        return {"watermark_lag": lag, "ring_fill_p99": 0.5,
+                "spill_fill_by_shard": [0.1, 0.3],
+                "flight_slo": {"bulk": {"p99_ms": 5.0}},
+                "lifecycle_states": {"committed": 3},   # nested: skipped
+                "label": "not-a-number"}
+
+
+def test_monitor_derives_series_and_flattens():
+    mon = HealthMonitor(_FakeTarget([1.0, 2.0]), cadence_s=0.0)
+    taken = mon.sample()
+    assert taken["watermark_lag"] == 1.0
+    assert taken["spill_fill_max"] == 0.3      # max over shards
+    assert taken["flight_p99_ms"] == 5.0       # worst class p99
+    mon.sample()
+    assert [v for _, v in mon.series("watermark_lag")] == [1.0, 2.0]
+    assert mon.latest()["watermark_lag"] == 2.0
+    assert mon.samples == 2 and mon.dropped == 0
+
+
+def test_monitor_ewma_alerts_and_jsonl(tmp_path):
+    log = tmp_path / "alerts.jsonl"
+    # baseline ~1.0, then 3x (warn: > 2x baseline), then 10x (crit:
+    # > 2*threshold*baseline); flagged samples never move the baseline
+    mon = HealthMonitor(_FakeTarget([1.0, 1.0, 3.0, 10.0, 1.0]),
+                        cadence_s=0.0, alpha=0.5, threshold=2.0,
+                        log_path=str(log))
+    for _ in range(5):
+        mon.sample()
+    events = mon.events()
+    lags = [e for e in events if e["gauge"] == "watermark_lag"]
+    assert [e["severity"] for e in lags] == ["warn", "crit"]
+    assert mon.alerts["watermark_lag"] == 2
+    assert mon.baselines()["watermark_lag"] == 1.0    # alerts excluded
+    assert mon.events(severity="crit")[0]["value"] == 10.0
+    lines = [json.loads(x) for x in log.read_text().splitlines()]
+    assert lines == events
+
+
+def test_monitor_cadence_and_null():
+    mon = HealthMonitor(_FakeTarget([1.0, 2.0]), cadence_s=3600.0)
+    assert mon.tick() is not None       # first sample always lands
+    assert mon.tick() is None           # within cadence: skipped
+    assert mon.samples == 1
+    assert NULL_MONITOR.tick() is None
+    assert NULL_MONITOR.sample() == {}
+    assert NULL_MONITOR.samples == 0
+
+
+def test_monitor_counter_tracks_stitch_and_validate():
+    mon = HealthMonitor(_FakeTarget([1.0, 2.0, 3.0]), cadence_s=0.0)
+    for _ in range(3):
+        mon.sample()
+    tracer = PhaseTracer(enabled=True)
+    with tracer.span("plan_phase"):
+        pass
+    trace = stitch_chrome_trace(tracer, FlightRecorder(enabled=False),
+                                monitor=mon)
+    counts = validate_chrome_trace(trace)
+    assert counts["counters"] == 3 * len(mon.keys())
+    assert counts["spans"] == 1
+    assert trace["otherData"]["health_samples"] == 3
+    cs = [e for e in trace["traceEvents"] if e["ph"] == "C"]
+    assert all(e["name"].startswith("health/") and e["args"]
+               for e in cs)
+    assert json.loads(json.dumps(trace)) == trace
+
+
+def test_validator_rejects_counter_without_args():
+    ok = {"name": "health/x", "ph": "C", "ts": 1, "pid": 0, "tid": 0,
+          "args": {"x": 1}}
+    counts = validate_chrome_trace({"traceEvents": [ok]})
+    assert counts["counters"] == 1
+    bad = dict(ok, args={})
+    with pytest.raises(ValueError, match="counter"):
+        validate_chrome_trace({"traceEvents": [bad]})
+
+
+# ------------------------------------------------- satellite: serving plane
+def test_scheduler_obs_instants_gauges_and_health():
+    from repro.serving.scheduler import BohmScheduler, Request
+    tracer = PhaseTracer(enabled=True)
+    sched = BohmScheduler(slots=2, num_pages=8, page_size=4,
+                          max_pages_per_seq=4, tracer=tracer)
+    sched.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=2))
+    sched.admit()
+    sched.plan_step({0: 7})
+    sched.complete(0)
+    sched.end_batch()
+    names = [name for _, name, _, _ in tracer.events()]
+    assert "serving/admit" in names
+    assert "serving/plan_step" in names
+    assert "serving/gc" in names                  # recycle happened
+    snap = sched.metrics.snapshot()
+    assert snap["serving/active_slots"] == 0
+    # prompt page stays pinned in the prefix cache; decode page recycled
+    assert snap["serving/free_pages"] == 7
+    assert snap["serving/queue_depth"] == 0
+    h = sched.health()
+    assert h["admitted"] == 1 and h["completed"] == 1
+    assert h["pages_recycled"] == 1 and h["page_fill"] == 0.125
+    assert h["slot_fill"] == 0.0 and h["pending_free_pages"] == 0
+    assert h["cached_pages"] == 1 and h["prefix_cache_entries"] == 1
+
+
+def test_scheduler_default_tracer_is_silent():
+    from repro.serving.scheduler import BohmScheduler, Request
+    sched = BohmScheduler(slots=1, num_pages=4, page_size=4,
+                          max_pages_per_seq=2)
+    sched.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                         max_new_tokens=1))
+    sched.admit()
+    assert not sched.tracer.enabled and not sched.tracer.events()
+
+
+# -------------------------------------------- satellite: ft EWMA deprecation
+def test_ft_monitor_ewma_reexport_deprecated():
+    import repro.ft.monitor as ftm
+    from repro.obs.ewma import Ewma, EwmaAnomaly
+    with pytest.warns(DeprecationWarning, match="repro.obs.ewma"):
+        assert ftm.EwmaAnomaly is EwmaAnomaly
+    with pytest.warns(DeprecationWarning):
+        assert ftm.Ewma is Ewma
+    with pytest.raises(AttributeError):
+        ftm.NoSuchThing

@@ -152,7 +152,7 @@ def test_tracer_span_export_and_validation(tmp_path):
     trace = tr.to_chrome_trace()
     counts = validate_chrome_trace(trace)
     assert counts == {"spans": 2, "instants": 1, "events": 5,
-                      "async_spans": 0, "async_lanes": 0}
+                      "async_spans": 0, "async_lanes": 0, "counters": 0}
     ev = trace["traceEvents"]
     names = [(e["ph"], e["name"]) for e in ev]
     assert names == [("B", "outer"), ("B", "inner"), ("E", "inner"),
